@@ -1,0 +1,109 @@
+"""Paper Fig. 8/9 analogue: AllReduce / AllGather across message sizes,
+algorithms (1PA / 2PA / ring) and backends.
+
+Three backends per point:
+  xla_native — jax.lax collectives (the NCCL-role baseline),
+  xla        — our DSL algorithms lowered to ppermute rounds,
+  pallas     — our DSL algorithms as channel-primitive TPU kernels
+               (interpret-emulated here; CPU wall time is NOT TPU time).
+
+Because the container has no TPU, each point reports BOTH the measured
+emulation wall time (relative structure only) and the α-β model
+prediction for v5e ICI (the number the selector uses). The selection
+column shows which algorithm the tuning layer picks — reproducing the
+paper's size-dependent crossovers is the point of the figure.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import algorithms as algos
+from repro.core import api as coll_api
+from repro.core import selector as sel
+from repro.core.executor import execute
+
+SIZES = [1 << 10, 1 << 14, 1 << 17, 1 << 20, 1 << 24]  # bytes
+N = 8
+
+
+def _mesh():
+    return Mesh(np.asarray(jax.devices()[:N]), ("x",))
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_allreduce(rows: list):
+    mesh = _mesh()
+    for nbytes in SIZES:
+        cols = max(nbytes // 4 // 128, 1)
+        x = jnp.ones((N, 128, cols), jnp.float32)
+
+        for backend in ("xla_native", "xla", "pallas"):
+            if backend == "pallas" and nbytes > (1 << 20):
+                continue  # interpret emulation too slow beyond 1MB
+            def run(xs, backend=backend):
+                return coll_api.all_reduce(xs[0], "x", backend=backend)[None]
+
+            f = jax.jit(shard_map(run, mesh=mesh, in_specs=P("x", None, None),
+                                  out_specs=P("x", None, None),
+                                  check_vma=False))
+            us = _time(f, x)
+            algo = sel.choose("all_reduce", n=N, nbytes=nbytes)
+            pred = sel.estimate_us(algo, N, nbytes)
+            rows.append(("allreduce", nbytes, backend, algo,
+                         round(us, 1), round(pred, 2)))
+
+
+def bench_allgather(rows: list):
+    mesh = _mesh()
+    for nbytes in SIZES:
+        cols = max(nbytes // 4 // 128 // N, 1)
+        x = jnp.ones((N, 128, cols), jnp.float32)
+
+        for backend in ("xla_native", "xla", "pallas"):
+            if backend == "pallas" and nbytes > (1 << 20):
+                continue
+            def run(xs, backend=backend):
+                return coll_api.all_gather(xs[0], "x", backend=backend)[None]
+
+            f = jax.jit(shard_map(run, mesh=mesh, in_specs=P("x", None, None),
+                                  out_specs=P("x", None, None),
+                                  check_vma=False))
+            us = _time(f, x)
+            algo = sel.choose("all_gather", n=N, nbytes=nbytes)
+            pred = sel.estimate_us(algo, N, nbytes)
+            rows.append(("allgather", nbytes, backend, algo,
+                         round(us, 1), round(pred, 2)))
+
+
+def gain_breakdown(rows: list):
+    """Paper §5.1 'Gain Breakdown': same ALGORITHM, different stacks —
+    sync-step and wire-byte counts per algorithm from the DSL analyzer
+    (the structural quantities behind the 1PA/2PA latency wins)."""
+    for name in ("allreduce_1pa", "allreduce_2pa", "allreduce_ring"):
+        prog = algos.REGISTRY[name](N)
+        st = prog.comm_stats(N, chunk_bytes=1)
+        rows.append((f"stats_{name}", st["comm_rounds"], "rounds",
+                     f"puts={st['puts_per_rank']}",
+                     st["wire_bytes_per_rank"], st["bytes_per_rank"]))
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    bench_allreduce(rows)
+    bench_allgather(rows)
+    gain_breakdown(rows)
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 11/12 analogue (cross-hardware portability): the same DSL
+algorithms priced on two TPU generations' link models, plus the
+selection crossovers per hardware. The paper's argument — the algorithm
+library + selector retarget with only new hardware constants — is
+demonstrated by the table itself (no algorithm code changes)."""
+from __future__ import annotations
+
+from repro.core import selector as sel
+
+HW_LINKS = {
+    # alpha_us, beta_GBps per link-direction aggregate
+    "v5e_ici": sel.LinkModel(alpha_us=1.0, beta_GBps=50.0, torus=True),
+    "v5p_ici": sel.LinkModel(alpha_us=0.8, beta_GBps=90.0, torus=True),
+    "dcn": sel.DCN,
+}
+
+SIZES = [1 << 10, 1 << 13, 1 << 17, 1 << 21, 1 << 26, 1 << 30]
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    for hw, link in HW_LINKS.items():
+        for nbytes in SIZES:
+            algo = sel.choose("all_reduce", n=8, nbytes=nbytes, link=link)
+            est = sel.estimate_us(algo, 8, nbytes, link)
+            ring = sel.estimate_us("allreduce_ring", 8, nbytes, link)
+            rows.append((f"crosshw_{hw}", nbytes, algo, round(est, 1),
+                         round(ring, 1), f"{ring / est:.2f}x_vs_ring"))
+    return rows

@@ -1,0 +1,49 @@
+"""§Roofline table assembly: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and emits the per-(arch × cell × mesh) three-term
+table used in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_all() -> list[dict]:
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    for d in load_all():
+        r = d["roofline"]
+        rows.append((
+            "roofline", f"{d['arch']}|{d['cell']}|{d['mesh']}|{d.get('mode','auto')}",
+            round(r["compute_s"] * 1e3, 2), round(r["memory_s"] * 1e3, 2),
+            round(r["collective_s"] * 1e3, 2), r["dominant"],
+        ))
+    return rows
+
+
+def markdown_table() -> str:
+    lines = [
+        "| arch | cell | mesh | compute ms | memory ms | collective ms "
+        "| dominant | useful-FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in load_all():
+        if d.get("mode", "auto") != "auto":
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['cell']} | {d['mesh']} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['dominant']} "
+            f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)

@@ -1,0 +1,26 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness: one section per paper table/figure.
+
+  collectives    — Fig. 8/9 (AllReduce/AllGather across sizes/backends)
+  llm_inference  — Fig. 10 (llama2-70b decode/prefill speedup, TP=8)
+  cross_hw       — Fig. 11/12 (portability across link models)
+  roofline       — §Roofline table from the dry-run artifacts
+
+Prints ``name,arg,...`` CSV rows (μs where timing applies).
+"""
+
+
+def main() -> None:
+    from benchmarks import collectives, cross_hw, llm_inference, roofline_table
+
+    print("name,arg,col3,col4,col5,col6")
+    for mod in (collectives, llm_inference, cross_hw, roofline_table):
+        for row in mod.main([]):
+            print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""hymba-1.5b — parallel attention+mamba heads [arXiv:2411.13676; hf].
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 ssm_state=16."""
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid", window=1024,
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab=32001, ssm=SSMConfig(state_dim=16), max_seq=1_048_576,
+)

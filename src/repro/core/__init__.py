@@ -1,0 +1,11 @@
+"""repro.core — MSCCL++ on TPU: primitives, channels, DSL, executors,
+algorithm library, selector, and the NCCL-shaped Collective API."""
+from repro.core import (  # noqa: F401
+    algorithms,
+    api,
+    channels,
+    dsl,
+    executor,
+    primitives,
+    selector,
+)

@@ -1,0 +1,204 @@
+"""Collective algorithms declared in the MSCCL++ DSL (paper §4.4).
+
+Each builder returns a ``dsl.Program`` symbolic in rank, valid for any
+axis size ``n``. These are the paper's default collective library:
+
+* ``allreduce_1pa``  — one-phase all-pairs (small messages; fewest syncs)
+* ``allreduce_2pa``  — two-phase all-pairs RS+AG (medium messages)
+* ``allpairs_rs`` / ``allpairs_ag`` — the 2PA building blocks (Fig. 5)
+* ``ring_ag`` / ``ring_rs`` / ``allreduce_ring`` — bandwidth-optimal for
+  large messages
+* ``alltoall``      — MoE dispatch/combine
+* ``broadcast_allpairs`` — root broadcast via gather+select
+
+2PH (hierarchical) is a *composition* over two mesh axes and lives in
+``api.hierarchical_all_reduce`` — the DSL is single-axis by design,
+mirroring MSCCLang's per-communicator programs.
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.core.dsl import CONST, PEER, RANK, Program
+
+__all__ = [
+    "allpairs_rs", "allpairs_ag", "allreduce_1pa", "allreduce_2pa",
+    "ring_ag", "ring_rs", "allreduce_ring", "alltoall",
+    "broadcast_allpairs", "REGISTRY",
+]
+
+
+@functools.lru_cache(maxsize=None)
+def allpairs_rs(n: int) -> Program:
+    """All-pairs ReduceScatter — paper Fig. 5, one network hop."""
+    p = Program("allpairs_rs", chunks=dict(input=n, scratch=n, output=1))
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("input", PEER(+i)), dst=("scratch", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("scratch", PEER(+i)), frm=PEER(+i))
+    p.local_reduce(("output", 0),
+                   [("input", RANK)] + [("scratch", PEER(+i)) for i in range(1, n)])
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def allpairs_ag(n: int) -> Program:
+    """All-pairs AllGather — one hop, N× fan-out."""
+    p = Program("allpairs_ag", chunks=dict(input=1, output=n))
+    p.local_copy(("output", RANK), ("input", 0))
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("input", 0), dst=("output", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("output", PEER(+i)), frm=PEER(+i))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def allreduce_1pa(n: int) -> Program:
+    """One-phase all-pairs AllReduce: broadcast whole buffer, reduce
+    locally. Latency-optimal for tiny messages (paper §4.4-1PA)."""
+    p = Program("allreduce_1pa", chunks=dict(input=1, scratch=n, output=1))
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("input", 0), dst=("scratch", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("scratch", PEER(+i)), frm=PEER(+i))
+    p.local_reduce(("output", 0),
+                   [("input", 0)] + [("scratch", PEER(+i)) for i in range(1, n)])
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def allreduce_2pa(n: int) -> Program:
+    """Two-phase all-pairs AllReduce = all-pairs RS + all-pairs AG
+    (paper §4.4-2PA). Bandwidth 2(N-1)/N × message, two hops."""
+    p = Program("allreduce_2pa", chunks=dict(input=n, scratch=n, output=n))
+    # phase 1: RS
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("input", PEER(+i)), dst=("scratch", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("scratch", PEER(+i)), frm=PEER(+i))
+    p.local_reduce(("output", RANK),
+                   [("input", RANK)] + [("scratch", PEER(+i)) for i in range(1, n)])
+    # phase 2: AG of the reduced shard
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("output", RANK), dst=("output", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("output", PEER(+i)), frm=PEER(+i))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def ring_ag(n: int) -> Program:
+    """Ring AllGather: N-1 neighbor hops, bandwidth-optimal."""
+    p = Program("ring_ag", chunks=dict(input=1, output=n))
+    p.local_copy(("output", RANK), ("input", 0))
+    for s in range(n - 1):
+        with p.round():
+            p.put(src=("output", PEER(-s)), dst=("output", PEER(-s)),
+                  to=PEER(+1))
+            p.wait(("output", PEER(-s - 1)), frm=PEER(-1))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def ring_rs(n: int) -> Program:
+    """Ring ReduceScatter: partial sums travel the ring (paper Fig. 1's
+    NCCL algorithm, re-expressed one-sided)."""
+    # Chunk ownership: chunk c is first sent by rank c+1 (= PEER(-1) of the
+    # sender), travels n-1 hops accumulating every rank's contribution, and
+    # lands fully-reduced at rank c — receiver r finishes with chunk r.
+    p = Program("ring_rs", chunks=dict(input=n, scratch=n, output=1))
+    with p.round():
+        p.put(src=("input", PEER(-1)), dst=("scratch", PEER(-1)), to=PEER(+1))
+    for s in range(1, n - 1):
+        with p.round():
+            p.wait(("scratch", PEER(-s - 1)), frm=PEER(-1))
+            p.local_reduce(("scratch", PEER(-s - 1)),
+                           [("scratch", PEER(-s - 1)), ("input", PEER(-s - 1))])
+            p.put(src=("scratch", PEER(-s - 1)), dst=("scratch", PEER(-s - 1)),
+                  to=PEER(+1))
+    with p.round():
+        p.wait(("scratch", RANK), frm=PEER(-1))
+    p.local_reduce(("output", 0), [("scratch", RANK), ("input", RANK)])
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def allreduce_ring(n: int) -> Program:
+    """Ring AllReduce = ring RS + ring AG, bandwidth-optimal for large
+    messages."""
+    p = Program("allreduce_ring", chunks=dict(input=n, scratch=n, output=n))
+    # RS phase (as ring_rs, but the reduced shard lands in output[RANK])
+    with p.round():
+        p.put(src=("input", RANK), dst=("scratch", RANK), to=PEER(+1))
+    for s in range(1, n - 1):
+        with p.round():
+            p.wait(("scratch", PEER(-s)), frm=PEER(-1))
+            p.local_reduce(("scratch", PEER(-s)),
+                           [("scratch", PEER(-s)), ("input", PEER(-s))])
+            p.put(src=("scratch", PEER(-s)), dst=("scratch", PEER(-s)),
+                  to=PEER(+1))
+    with p.round():
+        p.wait(("scratch", PEER(-(n - 1))), frm=PEER(-1))
+    p.local_reduce(("output", PEER(-(n - 1))),
+                   [("scratch", PEER(-(n - 1))), ("input", PEER(-(n - 1)))])
+    # AG phase: circulate the reduced shards
+    for s in range(n - 1):
+        with p.round():
+            p.put(src=("output", PEER(-(n - 1) - s)),
+                  dst=("output", PEER(-(n - 1) - s)), to=PEER(+1))
+            p.wait(("output", PEER(-(n - 1) - s - 1)), frm=PEER(-1))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def alltoall(n: int) -> Program:
+    """All-pairs AllToAll (MoE dispatch)."""
+    p = Program("alltoall", chunks=dict(input=n, output=n))
+    p.local_copy(("output", RANK), ("input", RANK))
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("input", PEER(+i)), dst=("output", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("output", PEER(+i)), frm=PEER(+i))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def broadcast_allpairs(n: int, root: int = 0) -> Program:
+    """Root broadcast via all-pairs gather + select. SPMD-expressible
+    (every rank puts; receivers keep only the root's chunk)."""
+    p = Program("broadcast_allpairs", chunks=dict(input=1, scratch=n, output=1))
+    p.local_copy(("scratch", RANK), ("input", 0))
+    with p.round():
+        for i in range(1, n):
+            p.put(src=("input", 0), dst=("scratch", RANK), to=PEER(+i))
+    with p.round():
+        for i in range(1, n):
+            p.wait(("scratch", PEER(+i)), frm=PEER(+i))
+    p.local_copy(("output", 0), ("scratch", CONST(root)))
+    return p.freeze()
+
+
+REGISTRY = {
+    "allpairs_rs": allpairs_rs,
+    "allpairs_ag": allpairs_ag,
+    "allreduce_1pa": allreduce_1pa,
+    "allreduce_2pa": allreduce_2pa,
+    "ring_ag": ring_ag,
+    "ring_rs": ring_rs,
+    "allreduce_ring": allreduce_ring,
+    "alltoall": alltoall,
+    "broadcast_allpairs": broadcast_allpairs,
+}

@@ -1,0 +1,279 @@
+"""MSCCL++ DSL — a chunk-oriented language for collective algorithms.
+
+Re-implementation of the paper's §4.3 DSL (an MSCCLang descendant) for
+TPU. An algorithm is declared *once* with a symbolic rank: every data
+movement is addressed relative to the executing device (``PEER(+i)``
+style offsets), which is exactly the SPMD form both executors need:
+
+* the **Pallas executor** traces the instruction list into a TPU kernel
+  whose puts/waits are channel primitives (paper-faithful path);
+* the **XLA executor** lowers each uniform-shift put round to
+  ``jax.lax.ppermute`` (+ local jnp compute), giving a portable
+  implementation of the *same algorithm* that works under pjit on any
+  backend — this is what the production models and the multi-pod
+  dry-run run on.
+
+Buffers are logical, chunk-granular arrays (``input``, ``output``,
+``scratch``), mirroring MSCCLang's chunk model. Synchronization is
+declared with ``wait``/``barrier`` but the executors are free to
+implement it differently (semaphores vs. collective data dependence) —
+the separation of declaration from implementation that the paper
+argues for.
+
+Example (all-pairs ReduceScatter, paper Fig. 5)::
+
+    p = Program("allpairs_rs", chunks=dict(input=N, scratch=N, output=1))
+    with p.round():
+        for i in range(1, N):
+            p.put(src=("input", PEER(+i)), dst=("scratch", RANK),
+                  to=PEER(+i))
+    with p.round():
+        for i in range(1, N):
+            p.wait(("scratch", PEER(+i)), frm=PEER(-i))
+    p.local_reduce(("output", 0), [("input", RANK)] +
+                   [("scratch", PEER(+i)) for i in range(1, N)])
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import enum
+from typing import Any, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "RANK", "PEER", "CONST", "IndexExpr",
+    "Program", "Round", "Instr", "Op",
+]
+
+
+# --------------------------------------------------------------------------
+# Symbolic index algebra: idx = (sign*rank + offset) mod N  |  constant
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IndexExpr:
+    """Index/rank expression: ``(sign * rank + offset) mod axis_size``
+    when ``relative`` else the constant ``offset``."""
+
+    sign: int = 0          # coefficient of `rank` (0, +1, -1)
+    offset: int = 0
+    relative: bool = True  # False -> plain constant (no mod)
+
+    def __call__(self, rank: Any, n: Any):
+        """Evaluate for concrete/traced rank. Works on ints and jax values."""
+        if not self.relative:
+            return self.offset
+        return (self.sign * rank + self.offset) % n
+
+    def shift(self) -> int:
+        """For put targets: the uniform ring shift this expression encodes
+        (requires sign=+1)."""
+        if not (self.relative and self.sign == 1):
+            raise ValueError(f"not a uniform shift: {self}")
+        return self.offset
+
+    def __repr__(self):
+        if not self.relative:
+            return f"{self.offset}"
+        s = {1: "rank", -1: "-rank", 0: ""}[self.sign]
+        if self.offset:
+            s += f"{self.offset:+d}"
+        return f"({s})%N"
+
+
+RANK = IndexExpr(sign=1, offset=0)
+
+
+def PEER(offset: int) -> IndexExpr:
+    """Rank at ring distance ``offset`` (may be negative)."""
+    return IndexExpr(sign=1, offset=offset)
+
+
+def CONST(c: int) -> IndexExpr:
+    return IndexExpr(sign=0, offset=c, relative=False)
+
+
+def _as_expr(v) -> IndexExpr:
+    if isinstance(v, IndexExpr):
+        return v
+    if isinstance(v, int):
+        return CONST(v)
+    raise TypeError(f"index must be IndexExpr or int, got {type(v)}")
+
+
+# --------------------------------------------------------------------------
+# Instruction set
+# --------------------------------------------------------------------------
+class Op(enum.Enum):
+    PUT = "put"              # one-sided chunk write to a peer
+    WAIT = "wait"            # wait for a chunk to arrive (recv side)
+    FLUSH = "flush"          # source-side completion of pending puts
+    BARRIER = "barrier"      # full-axis barrier (paper Fig.5 line 18)
+    COPY = "copy"            # local chunk copy
+    REDUCE = "reduce"        # local chunk reduction: dst = sum(srcs)
+
+
+@dataclasses.dataclass
+class Instr:
+    op: Op
+    # (buffer_name, chunk_index) pairs; semantics depend on op
+    dst: Optional[Tuple[str, IndexExpr]] = None
+    srcs: Tuple[Tuple[str, IndexExpr], ...] = ()
+    to: Optional[IndexExpr] = None    # PUT: destination rank
+    frm: Optional[IndexExpr] = None   # WAIT: source rank (for sizing/debug)
+    round_id: int = -1
+
+    def __repr__(self):
+        parts = [self.op.value]
+        if self.srcs:
+            parts.append("src=" + ",".join(f"{b}[{i}]" for b, i in self.srcs))
+        if self.dst:
+            parts.append(f"dst={self.dst[0]}[{self.dst[1]}]")
+        if self.to is not None:
+            parts.append(f"to={self.to}")
+        if self.frm is not None:
+            parts.append(f"frm={self.frm}")
+        return " ".join(parts)
+
+
+@dataclasses.dataclass
+class Round:
+    """A communication round: puts issued together, synchronized at the
+    round boundary. The unit over which optimization passes batch
+    signals/waits (paper §3.2.3 'batching synchronization')."""
+
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+
+
+class Program:
+    """A collective algorithm over one mesh axis, symbolic in rank.
+
+    ``chunks``: dict buffer-name -> number of chunks. All chunks share
+    one (rows, cols) shape chosen at execution time.
+    """
+
+    def __init__(self, name: str, chunks: dict[str, int],
+                 in_buffer: str = "input", out_buffer: str = "output"):
+        self.name = name
+        self.chunks = dict(chunks)
+        self.in_buffer = in_buffer
+        self.out_buffer = out_buffer
+        self.rounds: List[Round] = [Round()]
+        self._frozen = False
+        for b in (in_buffer, out_buffer):
+            if b not in self.chunks:
+                raise ValueError(f"{b!r} missing from chunks {list(chunks)}")
+
+    # -- construction ------------------------------------------------------
+    def _emit(self, instr: Instr) -> None:
+        if self._frozen:
+            raise RuntimeError("program is frozen")
+        instr.round_id = len(self.rounds) - 1
+        self.rounds[-1].instrs.append(instr)
+
+    @contextlib.contextmanager
+    def round(self):
+        """Open a new communication round."""
+        if self.rounds[-1].instrs:
+            self.rounds.append(Round())
+        yield self
+        self.rounds.append(Round())
+
+    def put(self, src, dst, to) -> None:
+        sb, si = src
+        db, di = dst
+        self._emit(Instr(Op.PUT, dst=(db, _as_expr(di)),
+                         srcs=((sb, _as_expr(si)),), to=_as_expr(to)))
+
+    def wait(self, chunk, frm) -> None:
+        b, i = chunk
+        self._emit(Instr(Op.WAIT, dst=(b, _as_expr(i)), frm=_as_expr(frm)))
+
+    def flush(self) -> None:
+        self._emit(Instr(Op.FLUSH))
+
+    def barrier(self) -> None:
+        self._emit(Instr(Op.BARRIER))
+
+    def local_copy(self, dst, src) -> None:
+        db, di = dst
+        sb, si = src
+        self._emit(Instr(Op.COPY, dst=(db, _as_expr(di)),
+                         srcs=((sb, _as_expr(si)),)))
+
+    def local_reduce(self, dst, srcs) -> None:
+        db, di = dst
+        self._emit(Instr(Op.REDUCE, dst=(db, _as_expr(di)),
+                         srcs=tuple((b, _as_expr(i)) for b, i in srcs)))
+
+    # -- introspection -----------------------------------------------------
+    def freeze(self) -> "Program":
+        self.rounds = [r for r in self.rounds if r.instrs]
+        self._frozen = True
+        return self
+
+    def instructions(self) -> List[Instr]:
+        return [i for r in self.rounds for i in r.instrs]
+
+    def validate(self, num_ranks: int) -> None:
+        """Static checks: buffer names exist, chunk indices in range for
+        every concrete rank, every awaited chunk has a matching put."""
+        for instr in self.instructions():
+            for b, i in (instr.srcs or ()) + ((instr.dst,) if instr.dst else ()):
+                if b not in self.chunks:
+                    raise ValueError(f"unknown buffer {b!r} in {instr}")
+                for r in range(num_ranks):
+                    idx = i(r, num_ranks)
+                    if not 0 <= idx < self.chunks[b]:
+                        raise ValueError(
+                            f"chunk index {idx} out of range for {b!r} "
+                            f"(rank {r}) in {instr}")
+        # wait/put matching: for each WAIT on (buf, idx) from rank f(r),
+        # some PUT must target (buf, idx') on `to`-rank with matching index.
+        puts = [i for i in self.instructions() if i.op is Op.PUT]
+        for w in self.instructions():
+            if w.op is not Op.WAIT:
+                continue
+            ok = False
+            for r in range(num_ranks):      # receiver rank
+                src_rank = w.frm(r, num_ranks)
+                want_idx = w.dst[1](r, num_ranks)
+                ok = any(
+                    p.to(src_rank, num_ranks) == r
+                    and p.dst[0] == w.dst[0]
+                    and p.dst[1](src_rank, num_ranks) == want_idx
+                    for p in puts
+                )
+                if not ok:
+                    raise ValueError(
+                        f"wait {w} (rank {r}) has no matching put")
+
+    def comm_stats(self, num_ranks: int, chunk_bytes: int) -> dict:
+        """Analytical cost: per-device bytes sent and sync rounds —
+        the DSL-level 'performance analysis' the paper mentions.
+
+        ``wire_bytes_per_rank`` weights each put by its ring-hop distance
+        (a put at shift s crosses min(s, N-s) ICI links on a torus) —
+        the contention term that makes ring beat all-pairs at large
+        sizes. Switched fabrics (DCN) should use ``bytes_per_rank``.
+        """
+        puts = [i for i in self.instructions() if i.op is Op.PUT]
+        rounds_with_comm = {i.round_id for i in puts}
+        n = num_ranks
+        wire = 0
+        for p in puts:
+            s = p.to.shift() % n
+            wire += chunk_bytes * min(s, n - s)
+        return dict(
+            puts_per_rank=len(puts),
+            bytes_per_rank=len(puts) * chunk_bytes,
+            wire_bytes_per_rank=wire,
+            comm_rounds=len(rounds_with_comm),
+            barriers=sum(1 for i in self.instructions() if i.op is Op.BARRIER),
+        )
+
+    def __repr__(self):
+        lines = [f"Program({self.name!r}, chunks={self.chunks})"]
+        for ri, r in enumerate(self.rounds):
+            lines.append(f"  round {ri}:")
+            lines += [f"    {i}" for i in r.instrs]
+        return "\n".join(lines)

@@ -1,0 +1,250 @@
+"""DSL Executors: lower a ``dsl.Program`` to runnable code.
+
+Two lowerings of the *same* declared algorithm (paper §3.1/§4.3 —
+declaration vs. implementation separation):
+
+* ``PallasExecutor`` — generates a TPU kernel whose instructions are the
+  MSCCL++ channel primitives (put/wait/barrier as remote DMAs and
+  semaphores). Paper-faithful; runs on TPU hardware or the interpret
+  emulator.
+* ``XlaExecutor``   — lowers each uniform-shift put to
+  ``jax.lax.ppermute`` and local chunk ops to jnp. Portable to any XLA
+  backend; used inside the pjit'd model code and the multi-pod dry-run.
+  Synchronization instructions (wait/flush/barrier) erase to data
+  dependence, which XLA enforces structurally.
+
+Both operate on 2D chunk payloads: the caller supplies ``x`` shaped
+``(chunks_in * rows, cols)`` and receives ``(chunks_out * rows, cols)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import primitives as prim
+from repro.core.channels import MemoryChannel
+from repro.core.dsl import Instr, Op, Program
+
+__all__ = ["XlaExecutor", "PallasExecutor", "execute"]
+
+# Pallas executor rotates among this many DMA semaphore pairs so that
+# byte credits of distinct communication rounds can never alias (the
+# cross-round hazard of §2.2.2 'Inflexible Synchronization'); a barrier
+# is auto-inserted if a program has more comm rounds than pairs.
+_NUM_SEM_PAIRS = 4
+
+
+class XlaExecutor:
+    """Interpret a Program with jax.lax collectives (portable path)."""
+
+    def __init__(self, program: Program, axis: str):
+        self.program = program.freeze() if not program._frozen else program
+        self.axis = axis
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        p = self.program
+        axis = self.axis
+        n = jax.lax.axis_size(axis)
+        me = jax.lax.axis_index(axis)
+        n_in = p.chunks[p.in_buffer]
+        rows = x.shape[0] // n_in
+        cols = x.shape[1]
+
+        bufs: dict[str, jax.Array] = {}
+        for name, k in p.chunks.items():
+            if name == p.in_buffer:
+                bufs[name] = x.reshape(n_in, rows, cols)
+            else:
+                bufs[name] = jnp.zeros((k, rows, cols), x.dtype)
+
+        for instr in p.instructions():
+            if instr.op is Op.PUT:
+                sb, si = instr.srcs[0]
+                db, di = instr.dst
+                shift = instr.to.shift()  # uniform ring shift (validated)
+                val = jax.lax.dynamic_index_in_dim(
+                    bufs[sb], si(me, n), axis=0, keepdims=False)
+                perm = [(r, (r + shift) % n) for r in range(n)]
+                val = jax.lax.ppermute(val, axis, perm)
+                # receiver places at di(sender) with sender = me - shift
+                sender = (me - shift) % n
+                bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                    bufs[db], val.astype(bufs[db].dtype), di(sender, n), axis=0)
+            elif instr.op in (Op.WAIT, Op.FLUSH, Op.BARRIER):
+                continue  # data dependence IS the synchronization here
+            elif instr.op is Op.COPY:
+                sb, si = instr.srcs[0]
+                db, di = instr.dst
+                val = jax.lax.dynamic_index_in_dim(
+                    bufs[sb], si(me, n), axis=0, keepdims=False)
+                bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                    bufs[db], val, di(me, n), axis=0)
+            elif instr.op is Op.REDUCE:
+                db, di = instr.dst
+                acc = None
+                for sb, si in instr.srcs:
+                    val = jax.lax.dynamic_index_in_dim(
+                        bufs[sb], si(me, n), axis=0, keepdims=False)
+                    acc = val if acc is None else acc + val
+                bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                    bufs[db], acc, di(me, n), axis=0)
+            else:  # pragma: no cover
+                raise NotImplementedError(instr.op)
+
+        out = bufs[p.out_buffer]
+        return out.reshape(out.shape[0] * rows, cols)
+
+
+class PallasExecutor:
+    """Trace a Program into a Pallas TPU kernel over channel primitives."""
+
+    def __init__(self, program: Program, axis: str, *, collective_id: int = 7,
+                 interpret=None):
+        self.program = program.freeze() if not program._frozen else program
+        self.axis = axis
+        self.collective_id = collective_id
+        self.interpret = interpret
+        # programs are built for a concrete axis size; the largest chunked
+        # buffer carries it (input/scratch/output have n chunks)
+        self._n_hint = max(self.program.chunks.values())
+
+    # -- static analysis ----------------------------------------------------
+    def _wait_put_rounds(self, n_hint: int = 8):
+        """Map each WAIT instr (by id) to the round of its matching PUT —
+        the wait must spin on the semaphore pair that put signals.
+        Programs are rank-symmetric, so matching at rank 0 suffices."""
+        p = self.program
+        puts = [i for i in p.instructions() if i.op is Op.PUT]
+        mapping = {}
+        n = n_hint
+        for w in p.instructions():
+            if w.op is not Op.WAIT:
+                continue
+            src_rank = w.frm(0, n)
+            want_idx = w.dst[1](0, n)
+            for put in puts:
+                if (put.to(src_rank, n) % n == 0 and put.dst[0] == w.dst[0]
+                        and put.dst[1](src_rank, n) == want_idx):
+                    mapping[id(w)] = put.round_id
+                    break
+            else:
+                raise ValueError(f"wait {w} has no matching put")
+        return mapping
+
+    # -- kernel body --------------------------------------------------------
+    def _kernel(self, x_ref, out_ref, scratch, bar_sem, *sems):
+        p = self.program
+        axis = self.axis
+        n = jax.lax.axis_size(axis)
+        me = jax.lax.axis_index(axis)
+        prim.start_barrier(axis)
+
+        refs = {p.in_buffer: x_ref.at[0], p.out_buffer: out_ref}
+        if scratch is not None:
+            refs["scratch"] = scratch
+
+        sem_pairs = [(sems[2 * i], sems[2 * i + 1])
+                     for i in range(len(sems) // 2)]
+        # semaphore pairs rotate over PUT rounds; a WAIT uses the pair of
+        # its matching put round (phase credits can then never alias —
+        # the §2.2.2 'Inflexible Synchronization' hazard, solved with sem
+        # separation instead of extra barriers).
+        put_rounds = sorted({i.round_id for i in p.instructions()
+                             if i.op is Op.PUT})
+        round_to_pair = {r: i % _NUM_SEM_PAIRS for i, r in enumerate(put_rounds)}
+        wait_to_round = self._wait_put_rounds(self._n_hint)
+        wrap = len(put_rounds) > _NUM_SEM_PAIRS
+
+        for ri, rnd in enumerate(p.rounds):
+            if (wrap and ri in round_to_pair and round_to_pair[ri] == 0
+                    and ri != put_rounds[0]):
+                prim.device_barrier(bar_sem, axis)  # safe pair reuse on wrap
+            for instr in rnd.instrs:
+                if instr.op is Op.PUT:
+                    send_sem, recv_sem = sem_pairs[round_to_pair[ri]]
+                    sb, si = instr.srcs[0]
+                    db, di = instr.dst
+                    shift = instr.to.shift()
+                    peer = (me + shift) % n
+                    chan = MemoryChannel(axis, peer, send_sem, recv_sem)
+                    chan.put(refs[sb].at[si(me, n)],
+                             refs[db].at[di(me, n)]).flush()
+                elif instr.op is Op.WAIT:
+                    send_sem, recv_sem = sem_pairs[
+                        round_to_pair[wait_to_round[id(instr)]]]
+                    db, di = instr.dst
+                    prim.wait_recv_into(refs[db].at[di(me, n)],
+                                        send_sem, recv_sem, {axis: me})
+                elif instr.op is Op.FLUSH:
+                    continue  # puts are flushed at issue in this executor
+                elif instr.op is Op.BARRIER:
+                    prim.device_barrier(bar_sem, axis)
+                elif instr.op is Op.COPY:
+                    sb, si = instr.srcs[0]
+                    db, di = instr.dst
+                    refs[db][di(me, n)] = refs[sb][si(me, n)]
+                elif instr.op is Op.REDUCE:
+                    db, di = instr.dst
+                    acc = None
+                    for sb, si in instr.srcs:
+                        val = refs[sb][si(me, n)]
+                        acc = val if acc is None else acc + val
+                    refs[db][di(me, n)] = acc
+                else:  # pragma: no cover
+                    raise NotImplementedError(instr.op)
+
+        prim.device_barrier(bar_sem, axis)  # exit barrier (see kernels/)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        from repro.kernels import comm_utils
+
+        p = self.program
+        interpret = (comm_utils.interpret_mode() if self.interpret is None
+                     else self.interpret)
+        n_in = p.chunks[p.in_buffer]
+        n_out = p.chunks[p.out_buffer]
+        rows = x.shape[0] // n_in
+        cols = x.shape[1]
+        scratch_shapes: list[Any] = []
+        has_scratch = "scratch" in p.chunks
+        if has_scratch:
+            scratch_shapes.append(
+                pltpu.VMEM((p.chunks["scratch"], rows, cols), x.dtype))
+        scratch_shapes.append(pltpu.SemaphoreType.REGULAR)
+        scratch_shapes += [pltpu.SemaphoreType.DMA] * (2 * _NUM_SEM_PAIRS)
+
+        def kernel(x_ref, out_ref, *rest):
+            if has_scratch:
+                scratch, bar_sem, *sems = rest
+            else:
+                scratch = None
+                bar_sem, *sems = rest
+            self._kernel(x_ref, out_ref, scratch, bar_sem, *sems)
+
+        out = pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((n_out, rows, cols), x.dtype),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.VMEM)],
+            out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+            compiler_params=pltpu.CompilerParams(
+                collective_id=self.collective_id),
+        )(x.reshape(1, n_in, rows, cols))
+        return out.reshape(n_out * rows, cols)
+
+
+def execute(program: Program, x: jax.Array, *, axis: str,
+            backend: str = "xla", **kw) -> jax.Array:
+    """Run a DSL program on a local shard inside shard_map."""
+    if backend == "xla":
+        return XlaExecutor(program, axis)(x)
+    if backend == "pallas":
+        return PallasExecutor(program, axis, **kw)(x)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,83 @@
+"""Algorithm selection — the tuning layer of the Collective API.
+
+NCCL picks ring-vs-tree from message size; the paper (§5.1) shows the
+right choice on its hardware is 1PA → 2PA → ring/2PH as size grows.
+We reproduce that policy with an explicit α-β cost model over the DSL
+programs' analytic stats (rounds = α term, bytes-on-wire = β term), so
+the crossover points fall out of hardware constants instead of being
+hard-coded — and can be overridden per deployment via ``TuningTable``.
+
+TPU v5e constants (same as the roofline): ICI ≈ 50 GB/s/link,
+per-hop latency ≈ 1 µs; DCN (pod axis) ≈ 6.25 GB/s/host, ≈ 10 µs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core import algorithms as algos
+
+__all__ = ["LinkModel", "ICI", "DCN", "estimate_us", "choose", "TuningTable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    alpha_us: float       # per-round latency
+    beta_GBps: float      # per-device injection bandwidth
+    torus: bool = True    # point-to-point torus: puts pay hop distance
+
+    def time_us(self, rounds: int, bytes_on_wire: int) -> float:
+        return rounds * self.alpha_us + bytes_on_wire / (self.beta_GBps * 1e3)
+
+
+ICI = LinkModel(alpha_us=1.0, beta_GBps=50.0, torus=True)
+DCN = LinkModel(alpha_us=10.0, beta_GBps=6.25, torus=False)  # switched
+
+# Candidate algorithms per collective (paper's default library §4.4).
+_CANDIDATES = {
+    "all_reduce": ["allreduce_1pa", "allreduce_2pa", "allreduce_ring"],
+    "all_gather": ["allpairs_ag", "ring_ag"],
+    "reduce_scatter": ["allpairs_rs", "ring_rs"],
+    "all_to_all": ["alltoall"],
+}
+
+
+def estimate_us(algo_name: str, n: int, nbytes: int,
+                link: LinkModel = ICI) -> float:
+    """α-β estimate for one algorithm instance on an n-rank axis.
+
+    ``nbytes`` is the full (unsharded) message size per device.
+    """
+    prog = algos.REGISTRY[algo_name](n)
+    n_in = prog.chunks[prog.in_buffer]
+    chunk_bytes = max(nbytes // n_in, 1)
+    stats = prog.comm_stats(n, chunk_bytes)
+    bytes_key = "wire_bytes_per_rank" if link.torus else "bytes_per_rank"
+    return link.time_us(stats["comm_rounds"] + stats["barriers"],
+                        stats[bytes_key])
+
+
+@dataclasses.dataclass
+class TuningTable:
+    """Deployment override: (collective, max_bytes) -> algorithm name.
+    Entries sorted by max_bytes; first match wins; fallback = cost model."""
+
+    entries: list[tuple[str, int, str]] = dataclasses.field(default_factory=list)
+
+    def lookup(self, collective: str, nbytes: int) -> Optional[str]:
+        for coll, max_bytes, name in sorted(self.entries, key=lambda e: e[1]):
+            if coll == collective and nbytes <= max_bytes:
+                return name
+        return None
+
+
+def choose(collective: str, *, n: int, nbytes: int,
+           link: LinkModel = ICI,
+           table: Optional[TuningTable] = None) -> str:
+    """Pick the fastest algorithm under the α-β model (or the table)."""
+    if table is not None:
+        hit = table.lookup(collective, nbytes)
+        if hit is not None:
+            return hit
+    cands = _CANDIDATES[collective]
+    return min(cands, key=lambda a: estimate_us(a, n, nbytes, link))

@@ -1,0 +1,273 @@
+"""Logical→physical sharding rules for every architecture family.
+
+Parameters are mapped to PartitionSpecs by *name-path pattern* with
+divisibility-aware fallbacks (replicate or move to an alternative dim),
+because the assigned archs break naive rules in practice:
+
+* GQA with n_kv_heads < TP (qwen3/mixtral/…): KV projections replicate
+  (the standard production fallback; KV weights are small);
+* hymba's 25 attention heads don't divide 16 → shard head_dim instead;
+* hubert's 504-way vocab / hymba's 32001 don't divide 16 → replicate
+  the embedding.
+
+DP batch goes on ('pod', 'data'); TP/EP on 'model'. Activations are
+constrained only at the step boundary; GSPMD propagates internally
+(the `auto` mode). The `explicit` shard_map mode reuses the same specs
+for its in/out contracts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["MeshAxes", "param_pspecs", "batch_pspec", "shardings_for",
+           "cache_pspecs", "logical_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: tuple[str, ...] = ("data",)     # DP axes (('pod','data') multi-pod)
+    model: str = "model"                  # TP/EP axis
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def _attn_specs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes) -> dict:
+    from repro.models.blocks import padded_heads
+
+    m = ax.model
+    nh, nkv = padded_heads(cfg)
+    nh_ok = _div(nh, mesh, m)
+    nkv_ok = _div(nkv, mesh, m)
+    hd_ok = _div(cfg.hd, mesh, m)
+    # q/o shard heads if possible, else head_dim, else replicate
+    q = P(None, None, m, None) if nh_ok else (
+        P(None, None, None, m) if hd_ok else P(None, None, None, None))
+    o = P(None, m, None, None) if nh_ok else (
+        P(None, None, m, None) if hd_ok else P(None, None, None, None))
+    kv = P(None, None, m, None) if nkv_ok else P(None, None, None, None)
+    sp = {"wq": q, "wk": kv, "wv": kv, "wo": o}
+    if cfg.qk_norm:
+        sp["q_norm"] = P(None, None)
+        sp["k_norm"] = P(None, None)
+    return sp
+
+
+def _mlp_specs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes, d_ff: int) -> dict:
+    m = ax.model if _div(d_ff, mesh, ax.model) else None
+    return {
+        "w_gate": P(None, None, m),
+        "w_up": P(None, None, m),
+        "w_down": P(None, m, None),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes) -> dict:
+    e = cfg.moe.num_experts
+    f = cfg.moe.d_ff_expert or cfg.d_ff
+    m = ax.model
+    if _div(e, mesh, m):
+        # expert parallelism: experts sharded across the model axis
+        return {
+            "router": P(None, None, None),
+            "w_gate": P(None, m, None, None),
+            "w_up": P(None, m, None, None),
+            "w_down": P(None, m, None, None),
+        }
+    # TP inside each expert (mixtral: 8 experts < 16-way axis)
+    fm = m if _div(f, mesh, m) else None
+    return {
+        "router": P(None, None, None),
+        "w_gate": P(None, None, None, fm),
+        "w_up": P(None, None, None, fm),
+        "w_down": P(None, None, fm, None),
+    }
+
+
+def _rwkv_specs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes) -> dict:
+    m = ax.model if _div(cfg.d_model, mesh, ax.model) else None
+    fm = ax.model if _div(cfg.d_ff, mesh, ax.model) else None
+    nh = cfg.d_model // 64
+    hm = ax.model if _div(nh, mesh, ax.model) else None
+    rep1 = P(None, None)
+    return {
+        "wr": P(None, None, m), "wk": P(None, None, m), "wv": P(None, None, m),
+        "wg": P(None, None, m), "wo": P(None, m, None),
+        "w_base": P(None, hm, None), "u": P(None, hm, None),
+        "w_lora_a": P(None, None, None), "w_lora_b": P(None, None, None),
+        "mix_r": rep1, "mix_k": rep1, "mix_v": rep1, "mix_w": rep1,
+        "mix_g": rep1, "mix_ck": rep1, "mix_cr": rep1,
+        "ck": P(None, None, fm), "cv": P(None, fm, None),
+        "cr": P(None, None, m),
+        "ln1": rep1, "ln2": rep1,
+    }
+
+
+def _ssm_specs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes) -> dict:
+    m = ax.model if _div(cfg.d_model, mesh, ax.model) else None
+    return {
+        "w_in": P(None, None, m), "w_bcdt": P(None, m, None),
+        "w_dt": P(None, None, m), "a_log": P(None, m, None),
+        "d_skip": P(None, m), "w_out": P(None, m, None),
+    }
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh,
+                 ax: MeshAxes = MeshAxes()) -> dict:
+    """PartitionSpec pytree matching ``init_params`` structure. Layer
+    leaves carry a leading (groups,) scan dim → specs get a leading None
+    (already included in the per-family dicts above)."""
+    m = ax.model
+    vocab_m = m if _div(cfg.vocab, mesh, m) else None
+
+    if cfg.family == "rwkv6":
+        layer = _rwkv_specs(cfg, mesh, ax)
+    else:
+        layer = {
+            "ln_attn": P(None, None),
+            "ln_mlp": P(None, None),
+            "attn": _attn_specs(cfg, mesh, ax),
+        }
+        if cfg.family == "moe":
+            layer["moe"] = _moe_specs(cfg, mesh, ax)
+        else:
+            layer["mlp"] = _mlp_specs(cfg, mesh, ax, cfg.d_ff)
+        if cfg.family == "hybrid":
+            layer["ssm"] = _ssm_specs(cfg, mesh, ax)
+
+    per = cfg.local_global_period if cfg.local_global_period > 1 else 1
+    specs = {
+        "embed": P(vocab_m, None),
+        "ln_f": P(None),
+        "layers": [layer for _ in range(per)] if per > 1 else [layer],
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, vocab_m)
+    return specs
+
+
+def batch_pspec(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes,
+                *, global_batch: int, embedded: bool = False):
+    """Batch sharding: DP over ('pod','data') when batch divides; the
+    batch=1 long-context cell shards the sequence on 'data' instead."""
+    daxes = tuple(a for a in ax.data if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    if global_batch % max(dp, 1) == 0 and global_batch >= dp:
+        b = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+        return P(b, None, None) if embedded else P(b, None)
+    # sequence sharding fallback (long_500k, global_batch=1)
+    sq = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    return P(None, sq, None) if embedded else P(None, sq)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes,
+                 *, batch: int, kv_lens: Optional[list] = None):
+    """Decode-cache shardings.
+
+    KV cache layout (groups, batch, n_kv, kv_len, hd):
+    * batch divisible by DP  -> batch on DP axes, kv_len on 'model'
+      (n_kv < TP for every decode arch here, so heads replicate and the
+      sequence dim absorbs the model axis — 1.4TB caches divide by all
+      256/512 chips);
+    * batch == 1 (long_500k) -> kv_len on (DP..., model) jointly.
+    Window (ring-buffer) slots whose kv_len doesn't divide fall back to
+    fewer axes.
+    """
+    from repro.models import transformer as tf
+
+    daxes = tuple(a for a in ax.data if a in mesh.shape)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    d = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+    batch_ok = batch % max(dp, 1) == 0 and batch >= dp
+    m = ax.model
+
+    if cfg.family == "rwkv6":
+        nh_ok = _div(cfg.d_model // 64, mesh, m)
+        hspec = m if nh_ok else None
+        if batch_ok:
+            return {"wkv": P(None, d, hspec, None, None),
+                    "shift_t": P(None, d, None), "shift_c": P(None, d, None)}
+        return {"wkv": P(None, None, hspec, None, None),
+                "shift_t": P(None, None, None), "shift_c": P(None, None, None)}
+
+    wins = tf.layer_windows(cfg)
+    if kv_lens is None:
+        kv_lens = [0 for _ in wins]
+
+    def kvspec(kv_len):
+        seq_m = m if (kv_len == 0 or _div(kv_len, mesh, m)) else None
+        if batch_ok:
+            return P(None, d, None, seq_m, None)
+        # batch=1: sequence takes axes greedily while the product divides
+        seq_axes, prod = [], 1
+        for a in daxes + (m,):
+            if kv_len == 0 or (kv_len % (prod * mesh.shape[a]) == 0):
+                seq_axes.append(a)
+                prod *= mesh.shape[a]
+        return P(None, None, None, tuple(seq_axes) if seq_axes else None, None)
+
+    cache = {"k": [kvspec(l) for l in kv_lens],
+             "v": [kvspec(l) for l in kv_lens]}
+    if cfg.family == "hybrid":
+        sspec = (P(None, d, m if _div(cfg.d_model, mesh, m) else None, None)
+                 if batch_ok else
+                 P(None, None, m if _div(cfg.d_model, mesh, m) else None, None))
+        cache["ssm"] = [sspec for _ in wins]
+    return cache
+
+
+def apply_fsdp(specs, shapes, mesh: Mesh, ax: MeshAxes = MeshAxes(),
+               *, fsdp_axis: str = "data") -> Any:
+    """ZeRO-3/FSDP decoration: additionally shard every parameter leaf
+    over the DP 'data' axis on the first still-unsharded dim that
+    divides (skipping tiny leaves). GSPMD inserts the per-layer weight
+    all-gathers; memory per chip drops by the data-axis size — required
+    for the ≥70B archs to fit v5e HBM (DESIGN.md §6).
+
+    ``shapes``: pytree of ShapeDtypeStruct/arrays matching ``specs``.
+    """
+    if fsdp_axis not in mesh.shape:
+        return specs
+    n = mesh.shape[fsdp_axis]
+
+    def one(sp, leaf):
+        if not isinstance(sp, P):
+            return sp
+        shape = leaf.shape
+        if int(np.prod(shape)) < (1 << 16):      # don't bother for tiny leaves
+            return sp
+        entries = list(sp) + [None] * (len(shape) - len(sp))
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is None and dim % n == 0 and dim >= n:
+                entries[i] = fsdp_axis
+                return P(*entries)
+        return sp
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_for(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def logical_rules(cfg: ModelConfig) -> dict[str, str]:
+    """Human-readable summary of the mapping (for DESIGN/docs/tests)."""
+    return {
+        "batch": "pod×data (seq on data when batch=1)",
+        "attn heads": "model (kv replicated when n_kv < axis)",
+        "mlp ff": "model",
+        "experts": "model when divisible else TP-in-expert",
+        "vocab": "model when divisible else replicated",
+        "layers": "scan dim, never sharded",
+    }

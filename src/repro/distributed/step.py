@@ -1,0 +1,213 @@
+"""Train/serve step builders over a device mesh.
+
+Two modes (DESIGN.md — collective backend duality):
+
+* ``auto``     — pjit/GSPMD: params + batch get PartitionSpecs, XLA
+  chooses the collectives. The framework-level NCCL-analogue baseline,
+  and the path the 512-device dry-run compiles for every cell.
+* ``explicit`` — shard_map with the MSCCL++ stack on the critical path:
+  DP gradient reduction runs our hierarchical 2PH program (intra-pod
+  reduce-scatter → cross-pod all-reduce on 1/L shards → intra-pod
+  all-gather) instead of XLA's all-reduce; TP stays inside a nested
+  pjit. This is the paper's technique integrated as a first-class
+  feature of the trainer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import api as coll_api
+from repro.distributed import sharding as shd
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+__all__ = ["make_train_step", "make_serve_step", "init_sharded"]
+
+
+def _dp_axes(mesh: Mesh, ax: shd.MeshAxes) -> tuple[str, ...]:
+    return tuple(a for a in ax.data if a in mesh.shape)
+
+
+def init_sharded(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, key,
+                 optimizer_cfg: Optional[opt.AdamWConfig] = None):
+    """Initialize params (+ opt state) directly into their shardings."""
+    pspecs = shd.param_pspecs(cfg, mesh, ax)
+    shardings = shd.shardings_for(pspecs, mesh)
+
+    params = jax.jit(
+        functools.partial(tf.init_params, cfg),
+        out_shardings=shardings)(key)
+    if optimizer_cfg is None:
+        return params, None
+    ospec = {"mu": pspecs, "nu": pspecs, "count": P()}
+    osh = shd.shardings_for(ospec, mesh)
+    opt_state = jax.jit(opt.adamw_init, out_shardings=osh)(params)
+    return params, opt_state
+
+
+def _pspecs(cfg, mesh, ax, fsdp: bool):
+    pspecs = shd.param_pspecs(cfg, mesh, ax)
+    if fsdp:
+        shapes = jax.eval_shape(functools.partial(tf.init_params, cfg),
+                                jax.random.key(0))
+        pspecs = shd.apply_fsdp(pspecs, shapes, mesh, ax)
+    return pspecs
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
+                    opt_cfg: opt.AdamWConfig, *, mode: str = "auto",
+                    global_batch: int, seq_len: int,
+                    remat_policy: str = "none",
+                    dp_backend: str = "xla",
+                    dp_wire_dtype=None,
+                    fsdp: bool = False,
+                    donate: bool = True):
+    """Returns jit'd ``step(params, opt_state, batch) -> (params,
+    opt_state, metrics)`` with shardings bound to ``mesh``."""
+    pspecs = _pspecs(cfg, mesh, ax, fsdp)
+    psh = shd.shardings_for(pspecs, mesh)
+    ospec = {"mu": pspecs, "nu": pspecs, "count": P()}
+    osh = shd.shardings_for(ospec, mesh)
+    embedded = cfg.frontend != "none"
+    bspec = {
+        "tokens": shd.batch_pspec(cfg, mesh, ax, global_batch=global_batch,
+                                  embedded=embedded),
+        "labels": shd.batch_pspec(cfg, mesh, ax, global_batch=global_batch),
+    }
+    bsh = shd.shardings_for(bspec, mesh)
+    dp = _dp_axes(mesh, ax)
+
+    def loss(params, batch):
+        return tf.loss_fn(params, cfg, batch, remat_policy=remat_policy)
+
+    if mode == "auto":
+        def step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(loss)(params, batch)
+            params, opt_state, metrics = opt.adamw_update(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, dict(metrics, loss=l)
+
+    elif mode == "explicit":
+        # Gradients are computed per-DP-shard inside a shard_map that is
+        # MANUAL over the dp axes (model stays auto/GSPMD for TP), then
+        # reduced by OUR collectives: 2PH hierarchical across (pod, data)
+        # — intra-pod RS, cross-pod AR on 1/L shards, intra-pod AG — the
+        # paper's algorithm on the trainer's critical path.
+        ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+        def reduce_leaf(leaf):
+            x2 = leaf.reshape(-1, leaf.shape[-1]) if leaf.ndim >= 2 \
+                else leaf.reshape(-1, 1)
+            if dp_wire_dtype is not None:
+                # wire compression (train/compression.py provides the
+                # int8+error-feedback variant; bf16 halves DP bytes)
+                x2 = x2.astype(dp_wire_dtype)
+            if len(dp) == 2:
+                red = coll_api.hierarchical_all_reduce(
+                    x2, local_axis=dp[1], node_axis=dp[0],
+                    backend=dp_backend)
+            elif len(dp) == 1:
+                red = coll_api.all_reduce(x2, dp[0], backend=dp_backend)
+            else:
+                red = x2
+            return (red / ndp).reshape(leaf.shape).astype(leaf.dtype)
+
+        def local_grads(params, batch):
+            l, grads = jax.value_and_grad(loss)(params, batch)
+            grads = jax.tree.map(reduce_leaf, grads)
+            l = jax.lax.pmean(l, dp) if dp else l
+            return l, grads
+
+        rep = jax.tree.map(lambda _: P(), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        grad_map = shard_map(
+            local_grads, mesh=mesh,
+            in_specs=(rep, jax.tree.map(lambda s: s, bspec,
+                                        is_leaf=lambda x: isinstance(x, P))),
+            out_specs=(P(), rep),
+            axis_names=set(dp),          # manual over DP; model stays auto
+            check_vma=False)
+
+        def step(params, opt_state, batch):
+            l, grads = grad_map(params, batch)
+            params, opt_state, metrics = opt.adamw_update(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, dict(metrics, loss=l)
+    else:
+        raise ValueError(mode)
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(
+        step,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, None),
+        donate_argnums=donate_argnums,
+    ), bspec
+
+
+def _strip_dp(pspecs):
+    """Param specs never include the dp axes; inside shard_map over the
+    full mesh the per-device grad view keeps its model-axis sharding
+    (expressed in the spec) and is replicated over dp."""
+    return pspecs
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
+                    batch: int, max_kv: int, donate: bool = True,
+                    fsdp: bool = False, kv_quant: bool = False):
+    """jit'd one-token decode step bound to mesh shardings.
+
+    serve_step(params, cache, tokens, pos) -> (logits, cache)
+    ``kv_quant``: int8 KV cache with per-token scales (§Perf C).
+    """
+    pspecs = _pspecs(cfg, mesh, ax, fsdp)
+    psh = shd.shardings_for(pspecs, mesh)
+    kv_lens = [min(w, max_kv) if w is not None else max_kv
+               for w in tf.layer_windows(cfg)]
+    cspecs = shd.cache_pspecs(cfg, mesh, ax, batch=batch, kv_lens=kv_lens)
+    if kv_quant and "k" in cspecs:
+        cspecs = dict(cspecs,
+                      k_scale=list(cspecs["k"]), v_scale=list(cspecs["v"]))
+    csh = shd.shardings_for(cspecs, mesh)
+    dp = _dp_axes(mesh, ax)
+    ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    d = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tok_spec = P(d) if batch % max(ndp, 1) == 0 and batch >= ndp else P(None)
+    tsh = NamedSharding(mesh, tok_spec)
+
+    def step(params, cache, tokens, pos):
+        return tf.decode_step(params, cfg, cache, tokens, pos)
+
+    return jax.jit(
+        step,
+        in_shardings=(psh, csh, tsh, None),
+        out_shardings=(None, csh),
+        donate_argnums=(1,) if donate else (),
+    ), cspecs
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
+                      global_batch: int, seq_len: int, fsdp: bool = False,
+                      remat_policy: str = "none"):
+    """jit'd full-sequence forward returning last-position logits (the
+    prefill cost driver; cache filling is engine-side)."""
+    pspecs = _pspecs(cfg, mesh, ax, fsdp)
+    psh = shd.shardings_for(pspecs, mesh)
+    embedded = cfg.frontend != "none"
+    bspec = shd.batch_pspec(cfg, mesh, ax, global_batch=global_batch,
+                            embedded=embedded)
+    bsh = NamedSharding(mesh, bspec)
+
+    def step(params, tokens):
+        hidden = tf.forward(params, cfg, tokens, remat_policy=remat_policy)
+        return tf.logits_fn(params, cfg, hidden[:, -1:, :])[:, 0]
+
+    return jax.jit(step, in_shardings=(psh, bsh), out_shardings=None), bspec

@@ -1,0 +1,124 @@
+"""Flash attention as a Pallas TPU kernel — the §Roofline lever for the
+train/prefill cells (the chunk-loop materializations of the pure-JAX
+online-softmax path are the largest single HBM-traffic source).
+
+TPU-native tiling (not a CUDA port — DESIGN.md §2):
+
+* grid = (batch·heads, q_blocks); per grid step the kernel streams KV
+  blocks from VMEM while the running (max, denom, acc) stay in VREGs —
+  the online-softmax recurrence with one HBM pass over K/V per q_block;
+* BlockSpec keeps blocks MXU-aligned: q/kv block sizes are multiples of
+  128 on the lane dim and 8 on the sublane dim; accumulation is f32;
+* causal + sliding-window masking by block-index arithmetic: blocks
+  entirely outside the window are skipped via ``pl.when`` (turns SWA
+  archs' O(s·w) sparsity into actually-skipped work, which the pure-JAX
+  scan cannot do under vmap).
+
+``ref.py:flash_attention_ref`` is the oracle; tests sweep shapes,
+dtypes, causal, and window.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import comm_utils
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_len: int, block_kv: int,
+               causal: bool, window: Optional[int], scale: float):
+    """Grid: (batch*heads, q_blocks). Refs per step:
+    q_ref: (block_q, hd); k_ref/v_ref: (kv_len, hd); o_ref: (block_q, hd).
+    """
+    block_q = q_ref.shape[0]
+    hd = q_ref.shape[1]
+    qi = pl.program_id(1)
+    q_start = qi * block_q
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k_start = ki * block_kv
+        k = k_ref[pl.dslice(k_start, block_kv), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(k_start, block_kv), :].astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bkv)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        rel = q_pos - k_pos
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= rel >= 0
+        if window is not None:
+            mask &= rel < window
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    n_kv_blocks = kv_len // block_kv
+
+    # block-level sparsity: causal/SWA skip fully-masked KV blocks
+    if causal or window is not None:
+        lo = 0
+        if window is not None:
+            # first block that can contain an in-window key
+            lo_val = jnp.maximum(q_start - (window - 1), 0) // block_kv
+        else:
+            lo_val = jnp.int32(0)
+        hi_val = (jnp.minimum((q_start + block_q - 1), kv_len - 1) // block_kv
+                  + 1) if causal else jnp.int32(n_kv_blocks)
+        m0 = jnp.full((block_q,), _NEG, jnp.float32)
+        l0 = jnp.zeros((block_q,), jnp.float32)
+        a0 = jnp.zeros((block_q, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(lo_val, hi_val, body, (m0, l0, a0))
+    else:
+        m0 = jnp.full((block_q,), _NEG, jnp.float32)
+        l0 = jnp.zeros((block_q,), jnp.float32)
+        a0 = jnp.zeros((block_q, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, a0))
+
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret=None):
+    """q: (b, h, s, hd); k/v: (b, h, s, hd) (kv heads pre-broadcast).
+    Returns (b, h, s, hd). VMEM per step ≈ block_q·hd + 2·s·hd + acc."""
+    interpret = comm_utils.interpret_mode() if interpret is None else interpret
+    b, h, s, hd = q.shape
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    scale = hd ** -0.5
+
+    qf = q.reshape(b * h, s, hd)
+    kf = k.reshape(b * h, s, hd)
+    vf = v.reshape(b * h, s, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, kv_len=s, block_kv=block_kv,
+                          causal=causal, window=window, scale=scale),
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, hd)

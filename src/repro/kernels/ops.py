@@ -1,0 +1,67 @@
+"""Unified jit'd entry points for every Pallas kernel in this package.
+
+One import surface for applications and benchmarks:
+
+    from repro.kernels import ops
+    y = ops.all_gather(x, axis="x", axis_size=8, algo="ring")
+
+Each op dispatches to the kernel implementation (and is the layer the
+Collective API's ``pallas`` backend would bind to on real TPU fleets
+when bypassing the DSL executor for the tuned default kernels —
+paper §4.4 'users can plug in their own algorithms').
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.allgather_ring import all_gather_ring
+from repro.kernels.allreduce_1pa import all_reduce_1pa
+from repro.kernels.allreduce_2ph import all_reduce_2ph
+from repro.kernels.alltoall import all_to_all_pallas
+from repro.kernels.collective_matmul import allgather_matmul
+from repro.kernels.reducescatter_2pa import (
+    all_gather_2pa,
+    all_reduce_2pa,
+    reduce_scatter_2pa,
+)
+
+__all__ = ["all_gather", "reduce_scatter", "all_reduce", "all_to_all",
+           "fused_allgather_matmul", "flash_attention"]
+
+
+def all_gather(x, *, axis: str, axis_size: int, algo: str = "ring", **kw):
+    if algo == "ring":
+        return all_gather_ring(x, axis=axis, axis_size=axis_size, **kw)
+    if algo == "allpairs":
+        return all_gather_2pa(x, axis=axis, axis_size=axis_size, **kw)
+    raise ValueError(f"unknown all_gather algo {algo!r}")
+
+
+def reduce_scatter(x, *, axis: str, axis_size: int, **kw):
+    return reduce_scatter_2pa(x, axis=axis, axis_size=axis_size, **kw)
+
+
+def all_reduce(x, *, axis: str, axis_size: int, algo: str = "2pa",
+               node_axis=None, node_size=None, **kw):
+    if algo == "1pa":
+        return all_reduce_1pa(x, axis=axis, axis_size=axis_size, **kw)
+    if algo == "2pa":
+        return all_reduce_2pa(x, axis=axis, axis_size=axis_size, **kw)
+    if algo == "2ph":
+        return all_reduce_2ph(x, local_axis=axis, local_size=axis_size,
+                              node_axis=node_axis, node_size=node_size, **kw)
+    raise ValueError(f"unknown all_reduce algo {algo!r}")
+
+
+def all_to_all(x, *, axis: str, axis_size: int, **kw):
+    return all_to_all_pallas(x, axis=axis, axis_size=axis_size, **kw)
+
+
+def fused_allgather_matmul(x, w, *, axis: str, axis_size: int, **kw):
+    return allgather_matmul(x, w, axis=axis, axis_size=axis_size, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    from repro.kernels.flash_attention import flash_attention as fa
+
+    return fa(q, k, v, **kw)

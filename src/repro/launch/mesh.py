@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run process sets the 512-device
+XLA flag before first jax init, other processes see real devices.
+
+Single pod:  (16, 16)      axes ('data', 'model')   — 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16)   axes ('pod', 'data', 'model') — 512 chips,
+             the 'pod' axis crossing DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import MeshAxes
+
+__all__ = ["make_production_mesh", "mesh_axes_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes_for(mesh) -> MeshAxes:
+    if "pod" in mesh.shape:
+        return MeshAxes(data=("pod", "data"), model="model")
+    return MeshAxes(data=("data",), model="model")

@@ -1,0 +1,343 @@
+"""Shared model blocks: norms, RoPE, GQA attention (full / SWA /
+local:global), SwiGLU MLP, MoE with top-k routing.
+
+Pure functions over parameter pytrees (dict leaves), shard_map/pjit
+friendly: no global state, no framework. Tensor-parallel sharding is
+applied from outside via PartitionSpecs on the parameter trees
+(``repro.distributed.sharding``); where the TP collective appears in
+the math (attention out-proj, MLP down-proj, MoE combine) the calls go
+through ``repro.distributed.collectives`` so the paper's collective
+stack is on the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "rope", "apply_rope", "attention", "decode_attention",
+    "mlp_swiglu", "moe_layer", "init_linear", "init_attn", "init_mlp",
+    "init_moe", "padded_heads",
+]
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin tables (..., head_dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                             / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, head_dim); cos/sin: (seq, head_dim/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    shape = (1,) * (x.ndim - 2) + cos.shape
+    cos = cos.reshape(shape)
+    sin = sin.reshape(shape)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _attn_mask(q_len: int, kv_len: int, *, causal: bool,
+               window: Optional[int], q_offset: int = 0):
+    """(q_len, kv_len) boolean mask. ``window``: SWA of that many tokens."""
+    q_pos = jnp.arange(q_len) + q_offset
+    k_pos = jnp.arange(kv_len)
+    rel = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    return mask
+
+
+def attention(p: Params, x, cfg, *, window: Optional[int], positions=None,
+              chunk: Optional[int] = None):
+    """Full-sequence GQA attention. x: (batch, seq, d_model).
+
+    Uses the online-softmax KV-chunked formulation whenever
+    ``seq > chunk`` so the (s, s) logits tensor is never materialized —
+    at 32k context the naive form needs tens of GB per device of
+    attention scores alone (caught by the roofline memory term). The
+    chunked form is the flash-attention recurrence in pure JAX; the
+    Pallas kernel version is the TPU fast path.
+    """
+    b, s, d = x.shape
+    hd = cfg.hd
+    nh, nkv = padded_heads(cfg)
+    chunk = chunk or getattr(cfg, "attn_chunk", 1024)
+    if positions is None:
+        positions = jnp.arange(s)
+
+    q = jnp.einsum("bsd,dnh->bnsh", x, p["wq"])       # (b, nh, s, hd)
+    k = jnp.einsum("bsd,dnh->bnsh", x, p["wk"])       # (b, nkv, s, hd)
+    v = jnp.einsum("bsd,dnh->bnsh", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    g = nh // nkv
+    q = q.reshape(b, nkv, g, s, hd)
+    if s > chunk and s % chunk == 0:
+        out = _chunked_attn(q, k, v, cfg, window=window, chunk=chunk)
+    else:
+        logits = jnp.einsum("bngsh,bnth->bngst", q, k).astype(jnp.float32)
+        logits *= hd ** -0.5
+        mask = _attn_mask(s, s, causal=cfg.causal, window=window)
+        logits = jnp.where(mask, logits, _NEG)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bngst,bnth->bngsh", probs, v)
+    out = out.reshape(b, nh, s, hd)
+    if nh > cfg.n_heads:
+        # hard-mask padded heads: exact math AND zero gradient into the
+        # padded wo rows (so they stay inert under training)
+        head_mask = (jnp.arange(nh) < cfg.n_heads).astype(out.dtype)
+        out = out * head_mask[None, :, None, None]
+    return jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
+
+
+_NEG = -1e30  # large-negative instead of -inf: keeps exp() well-defined
+               # for fully-masked rows in the online-softmax recurrence
+
+
+def _chunked_attn(q, k, v, cfg, *, window: Optional[int], chunk: int):
+    """Online-softmax over KV chunks: O(s·chunk) live memory.
+
+    q: (b, nkv, g, s, hd); k/v: (b, nkv, s, hd). Running (max, denom,
+    acc) carried across chunks — the flash-attention recurrence.
+    """
+    b, nkv, g, s, hd = q.shape
+    n_chunks = s // chunk
+    scale = hd ** -0.5
+    q_pos = jnp.arange(s)
+
+    k_c = k.reshape(b, nkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    v_c = v.reshape(b, nkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kc, vc = inp
+        logits = jnp.einsum("bngsh,bnth->bngst", q, kc).astype(jnp.float32)
+        logits *= scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        rel = q_pos[:, None] - k_pos[None, :]
+        mask = jnp.ones((s, chunk), bool)
+        if cfg.causal:
+            mask &= rel >= 0
+        if window is not None:
+            mask &= rel < window
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pr = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + pr.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bngst,bnth->bngsh", pr, vc.astype(jnp.float32))
+        return (m_new, l, acc), ()
+
+    m0 = jnp.full((b, nkv, g, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, nkv, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), k_c, v_c))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
+                     *, window: Optional[int], k_scale=None, v_scale=None):
+    """One-token decode with KV cache.
+
+    x: (batch, 1, d_model); cache_k/v: (batch, nkv, max_kv, hd);
+    pos: scalar current position. Returns (out, new_k, new_v[,
+    new_k_scale, new_v_scale]).
+
+    int8 KV quantization (§Perf hillclimb C): when the cache dtype is
+    int8, new tokens are written as round(x/s·127) with a per-(batch,
+    head, token) scale; the read path folds the scale into the attention
+    products so the full-cache stream stays 1 byte/element.
+    """
+    b, _, d = x.shape
+    hd = cfg.hd
+    nh, nkv = padded_heads(cfg)
+    max_kv = cache_k.shape[2]
+    quant = cache_k.dtype == jnp.int8
+
+    q = jnp.einsum("bsd,dnh->bnsh", x, p["wq"])
+    k_new = jnp.einsum("bsd,dnh->bnsh", x, p["wk"])
+    v_new = jnp.einsum("bsd,dnh->bnsh", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+
+    # ring-buffer update for windowed layers, linear for global layers
+    slot = pos % max_kv if window is not None else pos
+
+    def _write(cache, scales, val):
+        if not quant:
+            return jax.lax.dynamic_update_index_in_dim(
+                cache, val[:, :, 0], slot, axis=2), scales
+        sc = (jnp.max(jnp.abs(val[:, :, 0].astype(jnp.float32)),
+                      axis=-1, keepdims=True) / 127.0 + 1e-8)
+        qv = jnp.clip(jnp.round(val[:, :, 0].astype(jnp.float32) / sc),
+                      -127, 127).astype(jnp.int8)
+        cache = jax.lax.dynamic_update_index_in_dim(cache, qv, slot, axis=2)
+        scales = jax.lax.dynamic_update_index_in_dim(
+            scales, sc.astype(scales.dtype), slot, axis=2)
+        return cache, scales
+
+    cache_k, k_scale = _write(cache_k, k_scale, k_new)
+    cache_v, v_scale = _write(cache_v, v_scale, v_new)
+
+    g = nh // nkv
+    q = q.reshape(b, nkv, g, 1, hd)
+    if quant:
+        # int8 dot in bf16 compute (C2: halves the dequant materialization
+        # vs f32; accumulate in f32), scale folded after the dot
+        logits = jnp.einsum("bngsh,bnth->bngst", q.astype(jnp.bfloat16),
+                            cache_k.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        logits = logits * k_scale[:, :, None, :, 0][:, :, :, None, :].astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bngsh,bnth->bngst", q, cache_k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    k_pos = jnp.arange(max_kv)
+    if window is not None:
+        # ring buffer holds the last `max_kv` tokens; valid = within window
+        age = (slot - k_pos) % max_kv
+        valid = (age < jnp.minimum(pos + 1, max_kv))
+    else:
+        valid = k_pos <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    if quant:
+        probs = jax.nn.softmax(logits, axis=-1)
+        # scale folds into probs (per key position) before the value dot
+        pscaled = probs * v_scale[:, :, None, :, 0][:, :, :, None, :].astype(jnp.float32)
+        out = jnp.einsum("bngst,bnth->bngsh", pscaled.astype(jnp.bfloat16),
+                         cache_v.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bngst,bnth->bngsh", probs, cache_v)
+    out = out.reshape(b, nh, 1, hd)
+    if nh > cfg.n_heads:
+        head_mask = (jnp.arange(nh) < cfg.n_heads).astype(out.dtype)
+        out = out * head_mask[None, :, None, None]
+    ret = jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
+    if quant:
+        return ret, cache_k, cache_v, k_scale, v_scale
+    return ret, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# feed-forward
+# ---------------------------------------------------------------------------
+def mlp_swiglu(p: Params, x):
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("bsf,fd->bsd", act, p["w_down"])
+
+
+def moe_layer(p: Params, x, cfg):
+    """Top-k routed MoE, dense-einsum formulation (EP shards the expert
+    axis; dispatch becomes an all_to_all under shard_map — see
+    distributed.collectives.expert_dispatch for the sparse path)."""
+    b, s, d = x.shape
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    router = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    weights, idx = jax.lax.top_k(router, k)                    # (b, s, k)
+    weights = jax.nn.softmax(weights, axis=-1).astype(x.dtype)
+    onehot = jax.nn.one_hot(idx, e, dtype=x.dtype)             # (b, s, k, e)
+    combine = jnp.einsum("bsk,bske->bse", weights, onehot)     # (b, s, e)
+
+    gate = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    up = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out = jnp.einsum("bsef,efd->bsed", act, p["w_down"])
+    return jnp.einsum("bsed,bse->bsd", out, combine)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def init_linear(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def padded_heads(cfg):
+    """(n_heads_padded, n_kv_padded) under cfg.pad_heads_to."""
+    if not cfg.pad_heads_to or cfg.pad_heads_to <= cfg.n_heads:
+        return cfg.n_heads, cfg.n_kv_heads
+    nh = cfg.pad_heads_to
+    g = cfg.group_size
+    nkv = (nh + g - 1) // g
+    return nh, nkv
+
+
+def init_attn(key, cfg) -> Params:
+    hd, d = cfg.hd, cfg.d_model
+    nh, nkv = padded_heads(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], (d, nh, hd), cfg.jdtype),
+        "wk": init_linear(ks[1], (d, nkv, hd), cfg.jdtype),
+        "wv": init_linear(ks[2], (d, nkv, hd), cfg.jdtype),
+        "wo": init_linear(ks[3], (nh, hd, d), cfg.jdtype, scale=(nh * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), cfg.jdtype)
+        p["k_norm"] = jnp.zeros((hd,), cfg.jdtype)
+    return p
+
+
+def init_mlp(key, cfg, d_ff=None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(ks[0], (d, f), cfg.jdtype),
+        "w_up": init_linear(ks[1], (d, f), cfg.jdtype),
+        "w_down": init_linear(ks[2], (f, d), cfg.jdtype, scale=f ** -0.5),
+    }
+
+
+def init_moe(key, cfg) -> Params:
+    d = cfg.d_model
+    e = cfg.moe.num_experts
+    f = cfg.moe.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_linear(ks[0], (d, e), cfg.jdtype),
+        "w_gate": init_linear(ks[1], (e, d, f), cfg.jdtype),
+        "w_up": init_linear(ks[2], (e, d, f), cfg.jdtype),
+        "w_down": init_linear(ks[3], (e, f, d), cfg.jdtype, scale=f ** -0.5),
+    }

@@ -1,0 +1,127 @@
+"""RWKV-6 "Finch" layer: linear attention with data-dependent decay
+(arXiv:2404.05892). Attention-free — the per-head state is a (hd, hd)
+matrix updated recurrently, so decode cost and memory are O(1) in
+sequence length (why this arch runs the long_500k cell).
+
+Faithful structure: token-shift lerp with data-dependent mix (LoRA'd),
+decay w from a bounded exp(-exp(.)), bonus term u, channel-mix FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import init_linear, rms_norm
+
+__all__ = ["init_rwkv_layer", "rwkv_time_mix", "rwkv_channel_mix",
+           "rwkv_decode_step", "init_rwkv_state"]
+
+HEAD = 64  # rwkv6 head size
+
+
+def init_rwkv_layer(key, cfg):
+    d = cfg.d_model
+    f = cfg.d_ff
+    nh = d // HEAD
+    ks = jax.random.split(key, 12)
+    dt = cfg.jdtype
+    return {
+        # time-mix projections
+        "wr": init_linear(ks[0], (d, d), dt),
+        "wk": init_linear(ks[1], (d, d), dt),
+        "wv": init_linear(ks[2], (d, d), dt),
+        "wg": init_linear(ks[3], (d, d), dt),
+        "wo": init_linear(ks[4], (d, d), dt, scale=d ** -0.5),
+        # data-dependent decay LoRA (w = exp(-exp(base + lora(x))))
+        "w_base": jnp.zeros((nh, HEAD), dt) - 6.0,
+        "w_lora_a": init_linear(ks[5], (d, 64), dt),
+        "w_lora_b": init_linear(ks[6], (64, d), dt, scale=1e-2),
+        # per-head bonus
+        "u": jnp.zeros((nh, HEAD), dt) + 0.5,
+        # token-shift mixing coefficients (static part)
+        "mix_r": jnp.full((d,), 0.5, dt), "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt), "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        # channel mix
+        "ck": init_linear(ks[7], (d, f), dt),
+        "cv": init_linear(ks[8], (f, d), dt, scale=f ** -0.5),
+        "cr": init_linear(ks[9], (d, d), dt),
+        "mix_ck": jnp.full((d,), 0.5, dt), "mix_cr": jnp.full((d,), 0.5, dt),
+        "ln1": jnp.zeros((d,), dt), "ln2": jnp.zeros((d,), dt),
+    }
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = d // HEAD
+    return {
+        "wkv": jnp.zeros((batch, nh, HEAD, HEAD), dtype),  # (k,v) outer state
+        "shift_t": jnp.zeros((batch, d), dtype),           # last token (tmix)
+        "shift_c": jnp.zeros((batch, d), dtype),           # last token (cmix)
+    }
+
+
+def _tshift(x, last):
+    """token shift: concat(last_token, x[:-1]) along seq."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev
+
+
+def rwkv_time_mix(p, x, state):
+    """x: (b, s, d). Returns (out, new_state). Sequential scan over s —
+    the recurrence is what makes decode O(1)."""
+    b, s, d = x.shape
+    nh = d // HEAD
+    prev = _tshift(x, state["shift_t"].astype(x.dtype))
+
+    def mix(m):
+        return x * (1 - p[m]) + prev * p[m]
+
+    r = (mix("mix_r") @ p["wr"]).reshape(b, s, nh, HEAD)
+    k = (mix("mix_k") @ p["wk"]).reshape(b, s, nh, HEAD)
+    v = (mix("mix_v") @ p["wv"]).reshape(b, s, nh, HEAD)
+    g = jax.nn.silu((mix("mix_g") @ p["wg"]).astype(jnp.float32))
+    # data-dependent decay (Finch's contribution)
+    wlo = (jnp.tanh(mix("mix_w").astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+           @ p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(p["w_base"].astype(jnp.float32)[None, None]
+                         + wlo.reshape(b, s, nh, HEAD)))
+    u = p["u"].astype(jnp.float32)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+
+    def step(wkv, inp):
+        rt, kt, vt, wt = inp  # (b, nh, HEAD) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (b, nh, K, V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, wkv + u[None, :, :, None] * kv)
+        wkv = wt[..., :, None] * wkv + kv
+        return wkv, out
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    wkv, outs = jax.lax.scan(step, state["wkv"], xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)     # (b, s, d)
+    out = out * g
+    new_state = dict(state, wkv=wkv, shift_t=x[:, -1].astype(jnp.float32))
+    return (out.astype(x.dtype) @ p["wo"]), new_state
+
+
+def rwkv_channel_mix(p, x, state):
+    b, s, d = x.shape
+    prev = _tshift(x, state["shift_c"].astype(x.dtype))
+    k = (x * (1 - p["mix_ck"]) + prev * p["mix_ck"]) @ p["ck"]
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(((x * (1 - p["mix_cr"]) + prev * p["mix_cr"])
+                        @ p["cr"]).astype(jnp.float32))
+    out = (k @ p["cv"]) * r.astype(x.dtype)
+    return out, dict(state, shift_c=x[:, -1].astype(jnp.float32))
+
+
+def rwkv_decode_step(p, x, state, cfg):
+    """Single-token step: x (b, 1, d). O(1) state update."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, state = rwkv_time_mix(p, h, state)
+    x = x + att
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ffn, state = rwkv_channel_mix(p, h, state)
+    return x + ffn, state

@@ -1,0 +1,86 @@
+"""Selective state-space (Mamba-style) head block for Hymba's hybrid
+layers (arXiv:2411.13676): input-dependent (dt, B, C), diagonal A,
+associative-scan trainable, O(1)-state decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import init_linear
+
+__all__ = ["init_ssm_head", "ssm_forward", "ssm_decode_step", "init_ssm_state"]
+
+
+def init_ssm_head(key, cfg, d_inner: int):
+    """d_inner: the SSM head width (Hymba splits d_model across attn and
+    ssm head groups; caller passes the ssm share)."""
+    s = cfg.ssm.state_dim
+    dt_rank = cfg.ssm.dt_rank or max(cfg.d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "w_in": init_linear(ks[0], (cfg.d_model, 2 * d_inner), dt),
+        "w_bcdt": init_linear(ks[1], (d_inner, 2 * s + dt_rank), dt),
+        "w_dt": init_linear(ks[2], (dt_rank, d_inner), dt),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, s + 1, dtype=jnp.float32),
+                                  (d_inner, 1))).astype(dt),  # (d_inner, s)
+        "d_skip": jnp.ones((d_inner,), dt),
+        "w_out": init_linear(ks[3], (d_inner, cfg.d_model), dt,
+                             scale=d_inner ** -0.5),
+    }
+
+
+def init_ssm_state(cfg, batch: int, d_inner: int, dtype=jnp.float32):
+    return jnp.zeros((batch, d_inner, cfg.ssm.state_dim), dtype)
+
+
+def _ssm_params(p, x, cfg):
+    b, s_len, _ = x.shape
+    st = cfg.ssm.state_dim
+    dt_rank = cfg.ssm.dt_rank or max(cfg.d_model // 16, 1)
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)                     # (b, s, d_inner)
+    bcdt = xin @ p["w_bcdt"]
+    B = bcdt[..., :st].astype(jnp.float32)                 # (b, s, st)
+    C = bcdt[..., st:2 * st].astype(jnp.float32)
+    dt = jax.nn.softplus((bcdt[..., 2 * st:] @ p["w_dt"]).astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))           # (d_inner, st)
+    dA = jnp.exp(dt[..., None] * A[None, None])            # (b, s, d_inner, st)
+    dBx = (dt * xin.astype(jnp.float32))[..., None] * B[:, :, None, :]
+    return xin, z, dA, dBx, C
+
+
+def ssm_forward(p, x, cfg, state=None):
+    """x: (b, s, d_model) -> (out, final_state). Associative scan over s."""
+    xin, z, dA, dBx, C = _ssm_params(p, x, cfg)
+    b, s_len, d_inner, st = dA.shape
+    if state is None:
+        state = jnp.zeros((b, d_inner, st), jnp.float32)
+
+    # h_t = dA_t * h_{t-1} + dBx_t  — associative in (dA, dBx)
+    def combine(a, b_):
+        (a1, b1), (a2, b2) = a, b_
+        return (a1 * a2, b1 * a2 + b2)
+
+    dAs = jnp.moveaxis(dA, 1, 0)      # (s, b, d_inner, st)
+    dBxs = jnp.moveaxis(dBx, 1, 0)
+    # fold the incoming state into step 0
+    dBxs = dBxs.at[0].add(dAs[0] * state)
+    accA, accB = jax.lax.associative_scan(combine, (dAs, dBxs), axis=0)
+    h = jnp.moveaxis(accB, 0, 1)      # (b, s, d_inner, st)
+    y = jnp.einsum("bsdk,bsk->bsd", h, C)
+    y = y + xin.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    final = h[:, -1]
+    return (y.astype(x.dtype) @ p["w_out"]), final
+
+
+def ssm_decode_step(p, x, state, cfg):
+    """x: (b, 1, d_model); state: (b, d_inner, st). O(1) update."""
+    xin, z, dA, dBx, C = _ssm_params(p, x, cfg)
+    h = dA[:, 0] * state + dBx[:, 0]                      # (b, d_inner, st)
+    y = jnp.einsum("bdk,bk->bd", h, C[:, 0])
+    y = y + xin[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = (y.astype(x.dtype) @ p["w_out"])[:, None]
+    return out, h

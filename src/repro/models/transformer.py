@@ -1,0 +1,278 @@
+"""Unified LM: dense / MoE / RWKV6 / hybrid / encoder families behind
+one functional interface.
+
+Layers are stacked per *period group* and iterated with ``lax.scan`` so
+the HLO stays one-group-sized regardless of depth (compile-time control
+for the 512-device dry-run; same trick as MaxText). E.g. gemma3's
+5-local:1-global pattern scans over 8 groups of 6 layers.
+
+Parameter layout: ``params["layers"]`` is a list (length = period) of
+per-slot layer dicts whose leaves carry a leading ``groups`` dim; scan
+slices every leaf per group.
+
+Public surface:
+    init_params(cfg, key)            -> param pytree
+    forward(params, cfg, tokens)     -> final hidden states
+    logits_fn / loss_fn
+    init_cache(cfg, batch, max_kv)   -> decode cache pytree
+    decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, rwkv6, ssm
+from repro.models.blocks import rms_norm
+from repro.models.config import ModelConfig
+
+__all__ = ["init_params", "forward", "logits_fn", "loss_fn", "init_cache",
+           "decode_step", "layer_windows"]
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+def layer_windows(cfg: ModelConfig) -> list[Optional[int]]:
+    """Attention window per layer within one period group (gemma3:
+    period-1 local layers then 1 global; SWA archs: window everywhere)."""
+    per = cfg.local_global_period
+    if per > 1:
+        return [cfg.window] * (per - 1) + [None]
+    return [cfg.window]
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    per = cfg.local_global_period
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.family == "rwkv6":
+        return rwkv6.init_rwkv_layer(ks[0], cfg)
+    p = {
+        "ln_attn": jnp.zeros((d,), cfg.jdtype),
+        "ln_mlp": jnp.zeros((d,), cfg.jdtype),
+        "attn": blocks.init_attn(ks[0], cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = blocks.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = blocks.init_mlp(ks[1], cfg)
+    if cfg.family == "hybrid":
+        # parallel SSM heads beside attention (Hymba); outputs averaged
+        p["ssm"] = ssm.init_ssm_head(ks[2], cfg, d_inner=d)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    groups = n_groups(cfg)
+    per = len(layer_windows(cfg))
+
+    gkeys = jax.random.split(ks[0], groups * per).reshape(groups, per)
+    slots = []
+    for i in range(per):
+        per_group = [_init_layer(gkeys[g, i], cfg) for g in range(groups)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+
+    params = {
+        "embed": blocks.init_linear(ks[1], (cfg.vocab, cfg.d_model),
+                                    cfg.jdtype, scale=1.0),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.jdtype),
+        "layers": slots,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = blocks.init_linear(
+            ks[2], (cfg.d_model, cfg.vocab), cfg.jdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+def _run_layer(p, x, cfg: ModelConfig, win, positions):
+    if cfg.family == "rwkv6":
+        b = x.shape[0]
+        st = rwkv6.init_rwkv_state(cfg, b)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        att, st = rwkv6.rwkv_time_mix(p, h, st)
+        x = x + att
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        ffn, _ = rwkv6.rwkv_channel_mix(p, h, st)
+        return x + ffn
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    att = blocks.attention(p["attn"], h, cfg, window=win, positions=positions)
+    if cfg.family == "hybrid":
+        s_out, _ = ssm.ssm_forward(p["ssm"], h, cfg)
+        att = (att + s_out) * 0.5
+    x = x + att
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + blocks.moe_layer(p["moe"], h, cfg)
+    else:
+        x = x + blocks.mlp_swiglu(p["mlp"], h)
+    return x
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    """Integer tokens -> embedding lookup; float inputs are precomputed
+    frontend embeddings (audio frames / vision patches — stub per
+    assignment) and pass through."""
+    if not jnp.issubdtype(tokens.dtype, jnp.integer):
+        return tokens.astype(cfg.jdtype)
+    return params["embed"][tokens]
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None,
+            remat_policy: str = "none"):
+    """tokens: (b, s) int32 — or (b, s, d) embeddings for frontend archs."""
+    x = embed_tokens(params, cfg, tokens)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    wins = layer_windows(cfg)
+
+    def body(x, gp):  # gp: list of per-slot dicts (leaves sliced per group)
+        for i, win in enumerate(wins):
+            x = _run_layer(gp[i], x, cfg, win, positions)
+        return x, ()
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", hidden, w).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat_policy: str = "none"):
+    """batch: dict(tokens (b,s)[, labels (b,s)]). Mean next-token CE.
+
+    Sharded-vocab-friendly formulation: the gold logit is a one-hot
+    einsum and the logsumexp is explicit max/sum reductions, so under a
+    vocab-sharded unembedding GSPMD lowers this to partial reductions +
+    tiny (b, s) all-reduces instead of all-gathering the full (b, s,
+    vocab) logits (~40 GB/device at 151k vocab — caught by the roofline
+    collective term).
+    """
+    hidden = forward(params, cfg, batch["tokens"], remat_policy=remat_policy)
+    logits = logits_fn(params, cfg, hidden)
+    labels = batch["labels"]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_kv: int, dtype=None):
+    """Decode cache pytree.
+
+    Attention families: per period slot, (groups, b, nkv, kv_i, hd) with
+    kv_i = min(window, max_kv) for local slots (ring buffer) else max_kv.
+    RWKV6: O(1) recurrent state per group. Hybrid: + SSM state.
+    """
+    dtype = dtype or cfg.jdtype
+    g = n_groups(cfg)
+    if cfg.family == "rwkv6":
+        st = rwkv6.init_rwkv_state(cfg, batch)
+        return jax.tree.map(lambda x: jnp.zeros((g,) + x.shape, x.dtype), st)
+    wins = layer_windows(cfg)
+
+    _, nkv = blocks.padded_heads(cfg)
+
+    def kv(win):
+        size = min(win, max_kv) if win is not None else max_kv
+        return jnp.zeros((g, batch, nkv, size, cfg.hd), dtype)
+
+    cache = {"k": [kv(w) for w in wins], "v": [kv(w) for w in wins]}
+    if dtype == jnp.int8:
+        def sc(win):
+            size = min(win, max_kv) if win is not None else max_kv
+            return jnp.zeros((g, batch, nkv, size, 1), jnp.bfloat16)
+        cache["k_scale"] = [sc(w) for w in wins]
+        cache["v_scale"] = [sc(w) for w in wins]
+    if cfg.family == "hybrid":
+        cache["ssm"] = [jnp.zeros((g, batch, cfg.d_model, cfg.ssm.state_dim),
+                                  jnp.float32) for _ in wins]
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (b,) int32 (or (b, d) embeddings); pos: scalar int32.
+    Returns (logits (b, vocab) f32, new cache)."""
+    if not jnp.issubdtype(tokens.dtype, jnp.integer):
+        x = tokens.astype(cfg.jdtype)[:, None]          # embedded input
+    else:
+        x = params["embed"][tokens][:, None]            # (b, 1, d)
+    wins = layer_windows(cfg)
+
+    if cfg.family == "rwkv6":
+        def body(x, scanned):
+            gp_list, st = scanned
+            out, st = rwkv6.rwkv_decode_step(gp_list[0], x, st, cfg)
+            return out, st
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], cache))
+        h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return logits_fn(params, cfg, h)[:, 0], new_state
+
+    quant = "k_scale" in cache
+
+    def body(x, scanned):
+        gp_list, ck, cv, sst, ksc, vsc = scanned
+        new_k, new_v, new_s, new_ksc, new_vsc = [], [], [], [], []
+        for i, win in enumerate(wins):
+            lp = gp_list[i]
+            h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            if quant:
+                att, k_upd, v_upd, ks_upd, vs_upd = blocks.decode_attention(
+                    lp["attn"], h, ck[i], cv[i], pos, cfg, window=win,
+                    k_scale=ksc[i], v_scale=vsc[i])
+                new_ksc.append(ks_upd)
+                new_vsc.append(vs_upd)
+            else:
+                att, k_upd, v_upd = blocks.decode_attention(
+                    lp["attn"], h, ck[i], cv[i], pos, cfg, window=win)
+            if cfg.family == "hybrid":
+                s_out, s_new = ssm.ssm_decode_step(lp["ssm"], h, sst[i], cfg)
+                att = (att + s_out) * 0.5
+                new_s.append(s_new)
+            x = x + att
+            h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            if cfg.family == "moe":
+                x = x + blocks.moe_layer(lp["moe"], h, cfg)
+            else:
+                x = x + blocks.mlp_swiglu(lp["mlp"], h)
+            new_k.append(k_upd)
+            new_v.append(v_upd)
+        return x, (new_k, new_v, new_s, new_ksc, new_vsc)
+
+    sst = cache.get("ssm", [jnp.zeros((n_groups(cfg), 1)) for _ in wins])
+    dummy = [jnp.zeros((n_groups(cfg), 1)) for _ in wins]
+    ksc = cache.get("k_scale", dummy)
+    vsc = cache.get("v_scale", dummy)
+    x, (nk, nv, ns, nksc, nvsc) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], sst, ksc, vsc))
+    new_cache = dict(cache, k=nk, v=nv)
+    if "ssm" in cache:
+        new_cache["ssm"] = ns
+    if quant:
+        new_cache["k_scale"] = nksc
+        new_cache["v_scale"] = nvsc
+    h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, cfg, h)[:, 0], new_cache

@@ -1,0 +1,119 @@
+"""Training driver: checkpoint/restart, straggler watchdog, elastic
+re-mesh on device-count change.
+
+Fault-tolerance model (DESIGN.md §6):
+
+* **Checkpoint/restart** — async sharded checkpoints every
+  ``ckpt_every`` steps; on (re)start the loop resumes from the latest
+  manifest and the counter-based data pipeline replays the exact
+  stream.
+* **Node failure / elastic scaling** — checkpoints are
+  mesh-independent; ``run()`` accepts any mesh whose axes divide the
+  batch. A failure is handled by restarting with the surviving device
+  count (exercised in tests by re-meshing 8 -> 4 devices mid-run).
+* **Straggler mitigation** — a wall-clock watchdog per step; steps
+  slower than ``straggler_factor`` × the rolling median are logged and
+  counted (on real pods this feeds the controller that evicts the slow
+  host; here it is the observable hook + metric).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding as shd
+from repro.distributed.step import init_sharded, make_train_step
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_lib
+from repro.train import optimizer as opt
+
+__all__ = ["TrainConfig", "run"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_n: int = 3
+    log_every: int = 10
+    mode: str = "auto"                 # 'auto' | 'explicit'
+    straggler_factor: float = 3.0
+    seed: int = 0
+    remat_policy: str = "none"
+    fixed_batch: bool = False          # overfit batch_at(0) (tests)
+
+
+def run(cfg: ModelConfig, mesh, train_cfg: TrainConfig,
+        opt_cfg: Optional[opt.AdamWConfig] = None,
+        ax: shd.MeshAxes = shd.MeshAxes(),
+        log_fn: Callable[[str], None] = print) -> dict:
+    opt_cfg = opt_cfg or opt.AdamWConfig(
+        total_steps=train_cfg.steps,
+        warmup_steps=max(1, train_cfg.steps // 10))
+    step_fn, _ = make_train_step(
+        cfg, mesh, ax, opt_cfg, mode=train_cfg.mode,
+        global_batch=train_cfg.global_batch, seq_len=train_cfg.seq_len,
+        remat_policy=train_cfg.remat_policy)
+
+    pipeline = data_lib.make_pipeline(data_lib.DataConfig(
+        vocab=cfg.vocab, batch=train_cfg.global_batch,
+        seq_len=train_cfg.seq_len, seed=train_cfg.seed,
+        embedded_dim=cfg.d_model if cfg.frontend != "none" else 0))
+
+    params, opt_state = init_sharded(cfg, mesh, ax, jax.random.key(0),
+                                     optimizer_cfg=opt_cfg)
+    start = 0
+    if train_cfg.ckpt_dir and ckpt.latest_step(train_cfg.ckpt_dir) is not None:
+        state_like = {"params": params, "opt": opt_state}
+        restored, start = ckpt.restore(train_cfg.ckpt_dir, state_like)
+        pspecs = shd.param_pspecs(cfg, mesh, ax)
+        shardings = {
+            "params": shd.shardings_for(pspecs, mesh),
+            "opt": {"mu": shd.shardings_for(pspecs, mesh),
+                    "nu": shd.shardings_for(pspecs, mesh),
+                    "count": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())},
+        }
+        restored = jax.device_put(restored, shardings)
+        params, opt_state = restored["params"], restored["opt"]
+        log_fn(f"[ckpt] resumed from step {start}")
+
+    losses, durs, stragglers = [], [], 0
+    for step in range(start, train_cfg.steps):
+        batch = pipeline.batch_at(0 if train_cfg.fixed_batch else step)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        durs.append(dt)
+        losses.append(float(metrics["loss"]))
+        # straggler watchdog on the rolling median
+        if len(durs) >= 5:
+            med = float(np.median(durs[-50:]))
+            if dt > train_cfg.straggler_factor * med:
+                stragglers += 1
+                log_fn(f"[straggler] step {step}: {dt:.3f}s vs median {med:.3f}s")
+        if step % train_cfg.log_every == 0:
+            log_fn(f"step {step}: loss={losses[-1]:.4f} "
+                   f"gnorm={float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms")
+        if (train_cfg.ckpt_dir and step > start
+                and step % train_cfg.ckpt_every == 0):
+            ckpt.save_async(train_cfg.ckpt_dir, step,
+                            {"params": params, "opt": opt_state},
+                            keep_n=train_cfg.keep_n)
+    if train_cfg.ckpt_dir:
+        ckpt.wait_pending()
+        ckpt.save(train_cfg.ckpt_dir, train_cfg.steps,
+                  {"params": params, "opt": opt_state},
+                  keep_n=train_cfg.keep_n)
+    return dict(losses=losses, params=params, opt_state=opt_state,
+                stragglers=stragglers,
+                mean_step_s=float(np.mean(durs[1:])) if len(durs) > 1 else None)

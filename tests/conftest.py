@@ -1,0 +1,35 @@
+"""Test session config.
+
+The collective-kernel tests emulate a small multi-device TPU slice on CPU
+(Pallas interpret mode needs real XLA host devices to shard over). We pin
+a *small* count (8) here — NOT the 512-device production mesh, which is
+set exclusively inside ``repro/launch/dryrun.py`` per its own process.
+
+Must run before the first ``import jax`` anywhere in the test session.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return Mesh(np.asarray(jax.devices()[:8]), ("x",))
+
+
+@pytest.fixture(scope="session")
+def mesh2x4():
+    return Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4), ("node", "local"))
+
+
+@pytest.fixture(scope="session")
+def mesh4():
+    return Mesh(np.asarray(jax.devices()[:4]), ("x",))

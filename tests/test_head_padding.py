@@ -1,0 +1,48 @@
+"""Head padding (hillclimb A) must be numerically EXACT vs unpadded."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tf
+
+
+def test_padded_forward_exact():
+    cfg = configs.reduced(configs.get_config("llama3.2-3b"))
+    # reduced: nh=4? group preserved: use pad to 2*g*nkv
+    g = cfg.group_size
+    padded = dataclasses.replace(cfg, pad_heads_to=2 * cfg.n_heads)
+    params = tf.init_params(padded, jax.random.key(0))
+
+    # build the unpadded-equivalent by slicing the real heads out
+    def slice_heads(p):
+        q = dict(p)
+        q["attn"] = dict(p["attn"])
+        q["attn"]["wq"] = p["attn"]["wq"][:, :, :cfg.n_heads, :]
+        q["attn"]["wk"] = p["attn"]["wk"][:, :, :cfg.n_kv_heads, :]
+        q["attn"]["wv"] = p["attn"]["wv"][:, :, :cfg.n_kv_heads, :]
+        q["attn"]["wo"] = p["attn"]["wo"][:, :cfg.n_heads, :, :]
+        return q
+
+    unpadded = dict(params, layers=[slice_heads(sl) for sl in params["layers"]])
+    tokens = jnp.asarray(np.random.RandomState(0).randint(0, cfg.vocab, (2, 16)),
+                         jnp.int32)
+    h_pad = tf.forward(params, padded, tokens)
+    h_ref = tf.forward(unpadded, cfg, tokens)
+    np.testing.assert_allclose(np.asarray(h_pad), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_grads_keep_pad_inert():
+    cfg = configs.reduced(configs.get_config("llama3.2-3b"))
+    padded = dataclasses.replace(cfg, pad_heads_to=2 * cfg.n_heads)
+    params = tf.init_params(padded, jax.random.key(0))
+    batch = dict(
+        tokens=jnp.zeros((2, 8), jnp.int32),
+        labels=jnp.zeros((2, 8), jnp.int32))
+    grads = jax.grad(lambda p: tf.loss_fn(p, padded, batch))(params)
+    for sl in grads["layers"]:
+        gwo = np.asarray(sl["attn"]["wo"], np.float32)
+        assert np.all(gwo[:, cfg.n_heads:, :, :] == 0), "pad rows must get zero grad"

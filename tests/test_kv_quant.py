@@ -1,0 +1,29 @@
+"""int8 KV cache: decode must closely track the bf16 cache path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tf
+
+
+def test_int8_kv_decode_tracks_fp():
+    cfg = configs.reduced(configs.get_config("internvl2-76b"))
+    params = tf.init_params(cfg, jax.random.key(0))
+    b, s = 2, 10
+    tokens = jnp.asarray(np.random.RandomState(0).randint(0, cfg.vocab, (b, s)),
+                         jnp.int32)
+    cache_fp = tf.init_cache(cfg, b, max_kv=16)
+    cache_q = tf.init_cache(cfg, b, max_kv=16, dtype=jnp.int8)
+    assert "k_scale" in cache_q
+
+    for pos in range(s):
+        lg_fp, cache_fp = tf.decode_step(params, cfg, cache_fp,
+                                         tokens[:, pos], jnp.int32(pos))
+        lg_q, cache_q = tf.decode_step(params, cfg, cache_q,
+                                       tokens[:, pos], jnp.int32(pos))
+    # int8 KV: small logit deviation, same argmax in practice
+    denom = np.abs(np.asarray(lg_fp)).max()
+    rel = np.abs(np.asarray(lg_q) - np.asarray(lg_fp)).max() / denom
+    assert rel < 0.05, f"relative logit error {rel:.4f}"
+    assert (np.asarray(lg_q).argmax(-1) == np.asarray(lg_fp).argmax(-1)).mean() >= 0.5
