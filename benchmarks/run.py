@@ -5,15 +5,44 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 """Benchmark harness: one section per paper table/figure.
 
   collectives    — Fig. 8/9 (AllReduce/AllGather across sizes/backends)
+                   + optimizer before/after breakdown
   llm_inference  — Fig. 10 (llama2-70b decode/prefill speedup, TP=8)
   cross_hw       — Fig. 11/12 (portability across link models)
   roofline       — §Roofline table from the dry-run artifacts
 
-Prints ``name,arg,...`` CSV rows (μs where timing applies).
+Default: prints ``name,arg,...`` CSV rows (μs where timing applies).
+
+``--json``: runs the collectives section only and writes
+``BENCH_collectives.json`` next to the repo root — wall time,
+predicted µs, and DSL/collective instruction counts per point, plus
+the O0→O2 geomean speedup of the all-pairs family. CI keeps this file
+so the perf trajectory of the optimizer pipeline is tracked per PR.
 """
+import json
+import pathlib
+import sys
+
+# allow `python benchmarks/run.py` as well as `python -m benchmarks.run`
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--json" in argv:
+        from benchmarks import collectives
+
+        payload = collectives.json_payload()
+        out = pathlib.Path(__file__).resolve().parent.parent \
+            / "BENCH_collectives.json"
+        out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+        geo = payload["geomean_speedup_allpairs"]
+        print(f"wrote {out} ({len(payload['points'])} points, "
+              f"allpairs O0->O{payload['opt_default']} geomean "
+              f"speedup {geo}x)")
+        return
+
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table
 
     print("name,arg,col3,col4,col5,col6")

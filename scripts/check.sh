@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the command every PR must keep green
+# (see ROADMAP.md). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,125 @@
+"""jax version compatibility shims.
+
+The repo targets the modern jax surface (``jax.shard_map``,
+``pltpu.CompilerParams``, ``pltpu.InterpretParams``,
+``jax.lax.axis_size``); older releases (e.g. the 0.4.37 in this
+container) spell those differently or lack them. Every module imports
+the symbols from here instead of probing jax itself:
+
+* ``shard_map``      — ``jax.shard_map`` when present, else
+  ``jax.experimental.shard_map.shard_map``; the wrapper translates
+  between the modern ``check_vma=`` and the legacy ``check_rep=``
+  keyword so call sites can use either spelling.
+* ``CompilerParams`` — ``pltpu.CompilerParams`` when present, else the
+  legacy ``pltpu.TPUCompilerParams`` alias.
+* ``InterpretParams``/``interpret_params`` — the Pallas TPU interpret
+  configuration. Legacy jax has no ``pltpu.InterpretParams`` class and
+  no eager-DMA knob; ``interpret_params(...)`` then returns plain
+  ``True`` (the generic interpreter), and ``LEGACY_INTERPRET`` is set
+  so ``repro.core.primitives`` can degrade gracefully (scalar device
+  ids, no-op barriers — see there).
+* ``axis_size``      — static mesh-axis size inside shard_map;
+  ``jax.lax.axis_size`` when present, else read from the axis env.
+* ``HAS_MULTIAXIS_REMOTE_DMA`` — False when the legacy interpreter
+  cannot emulate remote DMAs under a mesh with more than one named
+  axis (its discharge rule raises ``NotImplementedError``); tests for
+  hierarchical Pallas kernels skip on it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+
+__all__ = [
+    "shard_map", "make_mesh", "CompilerParams", "InterpretParams",
+    "interpret_params", "axis_size", "LEGACY_INTERPRET",
+    "HAS_MULTIAXIS_REMOTE_DMA", "HAS_PARTIAL_MANUAL_SHARD_MAP",
+]
+
+# -- shard_map ---------------------------------------------------------------
+try:  # modern: top-level export with check_vma=
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # legacy: experimental, check_rep=
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+_HAS_VMA = "check_vma" in _inspect.signature(_shard_map).parameters
+
+
+_HAS_AXIS_NAMES = "axis_names" in _inspect.signature(_shard_map).parameters
+
+#: Partial-manual shard_map (manual over a subset of mesh axes, the rest
+#: left to GSPMD) is only reliable on the modern ``axis_names=`` API; the
+#: legacy ``auto=`` spelling CHECK-crashes the old XLA SPMD partitioner
+#: on the grad-reduction patterns the trainer emits.
+HAS_PARTIAL_MANUAL_SHARD_MAP = _HAS_AXIS_NAMES
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, *args, **kwargs):
+    if _HAS_VMA and "check_rep" in kwargs:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    elif not _HAS_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if not _HAS_AXIS_NAMES and "axis_names" in kwargs:
+        # modern: axis_names = the axes the body is *manual* over;
+        # legacy spells the complement as auto=.
+        manual = frozenset(kwargs.pop("axis_names"))
+        mesh = kwargs["mesh"]
+        kwargs["auto"] = frozenset(mesh.axis_names) - manual
+    return _shard_map(f, *args, **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """``jax.make_mesh`` accepting (and dropping, on legacy jax) the
+    modern ``axis_types=`` keyword."""
+    if axis_types is not None and \
+            "axis_types" in _inspect.signature(jax.make_mesh).parameters:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# -- Pallas TPU params -------------------------------------------------------
+from jax.experimental.pallas import tpu as _pltpu  # noqa: E402
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    getattr(_pltpu, "TPUCompilerParams")
+
+InterpretParams = getattr(_pltpu, "InterpretParams", None)
+#: True when this jax lacks the TPU interpret machinery (eager-DMA
+#: emulation with dict device ids and remote semaphore signals).
+LEGACY_INTERPRET = InterpretParams is None
+HAS_MULTIAXIS_REMOTE_DMA = not LEGACY_INTERPRET
+
+
+def interpret_params(**kwargs: Any):
+    """Interpret-mode config for ``pl.pallas_call(interpret=...)``.
+
+    Modern jax: a ``pltpu.InterpretParams`` instance with the given
+    options. Legacy jax: plain ``True`` — the generic interpreter,
+    which executes remote DMAs eagerly at ``start()`` (the semantics
+    ``dma_execution_mode='eager'`` asks for) but supports neither
+    remote semaphore signals nor multi-axis meshes.
+    """
+    if LEGACY_INTERPRET:
+        return True
+    return InterpretParams(**kwargs)
+
+
+# -- axis_size ---------------------------------------------------------------
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    from jax._src import core as _jax_core
+
+    def axis_size(name) -> int:
+        """Static size of a named mesh axis (inside shard_map)."""
+        if isinstance(name, (tuple, list)):
+            out = 1
+            for n in name:
+                out *= axis_size(n)
+            return out
+        return _jax_core.get_axis_env().axis_size(name)

@@ -1,11 +1,13 @@
-"""repro.core — MSCCL++ on TPU: primitives, channels, DSL, executors,
-algorithm library, selector, and the NCCL-shaped Collective API."""
+"""repro.core — MSCCL++ on TPU: primitives, channels, DSL, optimizer
+passes, executors, algorithm library, selector, and the NCCL-shaped
+Collective API."""
 from repro.core import (  # noqa: F401
     algorithms,
     api,
     channels,
     dsl,
     executor,
+    passes,
     primitives,
     selector,
 )

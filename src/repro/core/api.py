@@ -14,6 +14,15 @@ NCCL-shaped collectives callable *inside* ``shard_map``. Each call:
 Payloads are 2D ``(rows, cols)``; ``tree_all_reduce`` adds NCCL-style
 bucket fusion for parameter/grad pytrees (flatten → one fat collective
 → unflatten), which is how the training stack consumes this API.
+
+Every collective takes an ``opt_level`` (default
+``passes.DEFAULT_OPT_LEVEL``): the selected DSL program runs through
+the ``repro.core.passes`` optimizer pipeline before lowering —
+dead-copy elimination and sync batching at 1, put coalescing (one
+collective per fused round on the xla backend) at 2, chunk-split
+pipelining for ring programs at 3. Level 0 runs the program exactly as
+declared through the reference per-chunk lowering — the benchmarks'
+before/after baseline.
 """
 from __future__ import annotations
 
@@ -25,8 +34,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import algorithms as algos
+from repro.core import passes
 from repro.core import selector as sel
 from repro.core.executor import XlaExecutor, PallasExecutor
+from repro import compat
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all",
@@ -45,14 +56,34 @@ def default_backend() -> str:
 
 
 def _axis_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
-def _run(prog, x, axis: str, backend: str, coll: str):
+def _prepare(prog, n: int, opt_level: Optional[int], rows: Optional[int] = None):
+    """Resolve the opt level and run the optimizer (cached in passes).
+    Returns (program, level).
+
+    ``rows``: the caller's payload rows. Chunk-split (level 3)
+    multiplies the input chunk count; when ``rows`` is not divisible by
+    the split count the level falls back to the un-split pipeline
+    instead of producing a broken reshape downstream (collectives whose
+    output layout embeds the chunk grid cannot simply pad like
+    ``all_reduce`` does).
+    """
+    level = passes.DEFAULT_OPT_LEVEL if opt_level is None else opt_level
+    opt = passes.optimize(prog, level, n)
+    while (rows is not None and level > 2
+           and rows % opt.chunks[opt.in_buffer] != 0):
+        level -= 1
+        opt = passes.optimize(prog, level, n)
+    return opt, level
+
+
+def _run(prog, x, axis: str, backend: str, coll: str, opt_level: int):
     if backend == "pallas":
         return PallasExecutor(prog, axis,
                               collective_id=_COLLECTIVE_IDS[coll])(x)
-    return XlaExecutor(prog, axis)(x)
+    return XlaExecutor(prog, axis, vectorize=opt_level > 0)(x)
 
 
 def _choose(coll: str, n: int, nbytes: int, algo: Optional[str],
@@ -64,48 +95,55 @@ def _choose(coll: str, n: int, nbytes: int, algo: Optional[str],
 # collectives (call inside shard_map)
 # ---------------------------------------------------------------------------
 def all_reduce(x, axis: str, *, backend: Optional[str] = None,
-               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI):
+               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+               opt_level: Optional[int] = None):
     """x: (rows, cols) -> same shape, summed over `axis`."""
     backend = backend or default_backend()
     if backend == "xla_native":
         return jax.lax.psum(x, axis)
     n = _axis_size(axis)
     name = _choose("all_reduce", n, x.size * x.dtype.itemsize, algo, link)
-    prog = algos.REGISTRY[name](n)
+    prog, level = _prepare(algos.REGISTRY[name](n), n, opt_level)
+    # pad AFTER optimization: chunk-split multiplies the chunk count
     n_in = prog.chunks[prog.in_buffer]
     rows = x.shape[0]
     pad = (-rows) % n_in
     xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
-    out = _run(prog, xp, axis, backend, "all_reduce")
+    out = _run(prog, xp, axis, backend, "all_reduce", level)
     return out[:rows] if pad else out
 
 
 def all_gather(x, axis: str, *, backend: Optional[str] = None,
-               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI):
+               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+               opt_level: Optional[int] = None):
     """x: (rows, cols) shard -> (N*rows, cols) gathered (tiled order)."""
     backend = backend or default_backend()
     if backend == "xla_native":
         return jax.lax.all_gather(x, axis, tiled=True)
     n = _axis_size(axis)
     name = _choose("all_gather", n, x.size * x.dtype.itemsize * n, algo, link)
-    prog = algos.REGISTRY[name](n)
-    return _run(prog, x, axis, backend, "all_gather")
+    prog, level = _prepare(algos.REGISTRY[name](n), n, opt_level,
+                           rows=x.shape[0])
+    return _run(prog, x, axis, backend, "all_gather", level)
 
 
 def reduce_scatter(x, axis: str, *, backend: Optional[str] = None,
-                   algo: Optional[str] = None, link: sel.LinkModel = sel.ICI):
+                   algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+                   opt_level: Optional[int] = None):
     """x: (N*rows, cols) -> (rows, cols): my reduced row-block."""
     backend = backend or default_backend()
     if backend == "xla_native":
         return jax.lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
     n = _axis_size(axis)
     name = _choose("reduce_scatter", n, x.size * x.dtype.itemsize, algo, link)
-    prog = algos.REGISTRY[name](n)
-    return _run(prog, x, axis, backend, "reduce_scatter")
+    prog, level = _prepare(algos.REGISTRY[name](n), n, opt_level,
+                           rows=x.shape[0])
+    return _run(prog, x, axis, backend, "reduce_scatter", level)
 
 
 def all_to_all(x, axis: str, *, backend: Optional[str] = None,
-               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI):
+               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+               opt_level: Optional[int] = None):
     """x: (N*rows, cols): row-block b -> device b; returns blocks
     received from each device, stacked."""
     backend = backend or default_backend()
@@ -116,12 +154,14 @@ def all_to_all(x, axis: str, *, backend: Optional[str] = None,
                                  tiled=False)
         return out.reshape(x.shape)
     n = _axis_size(axis)
-    prog = algos.REGISTRY["alltoall"](n)
-    return _run(prog, x, axis, backend, "all_to_all")
+    prog, level = _prepare(algos.REGISTRY["alltoall"](n), n, opt_level,
+                           rows=x.shape[0])
+    return _run(prog, x, axis, backend, "all_to_all", level)
 
 
 def broadcast(x, axis: str, root: int = 0, *, backend: Optional[str] = None,
-              link: sel.LinkModel = sel.ICI):
+              link: sel.LinkModel = sel.ICI,
+              opt_level: Optional[int] = None):
     """x: (rows, cols) -> root's buffer on every device."""
     backend = backend or default_backend()
     if backend == "xla_native":
@@ -130,13 +170,15 @@ def broadcast(x, axis: str, root: int = 0, *, backend: Optional[str] = None,
         masked = jnp.where(me == root, x, jnp.zeros_like(x))
         return jax.lax.psum(masked, axis)
     n = _axis_size(axis)
-    prog = algos.broadcast_allpairs(n, root)
-    return _run(prog, x, axis, backend, "broadcast")
+    prog, level = _prepare(algos.broadcast_allpairs(n, root), n, opt_level,
+                           rows=x.shape[0])
+    return _run(prog, x, axis, backend, "broadcast", level)
 
 
 def hierarchical_all_reduce(x, *, local_axis: str, node_axis: str,
                             backend: Optional[str] = None,
-                            small_message_bytes: int = 1 << 20):
+                            small_message_bytes: int = 1 << 20,
+                            opt_level: Optional[int] = None):
     """2PH AllReduce (paper §4.4-2PH): RS(local) → AR(node) → AG(local).
 
     The cross-node phase moves 1/L of the data (L = local axis size) —
@@ -152,11 +194,12 @@ def hierarchical_all_reduce(x, *, local_axis: str, node_axis: str,
     pad = (-rows) % lnum
     xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
 
-    shard = reduce_scatter(xp, local_axis, backend=backend)
+    shard = reduce_scatter(xp, local_axis, backend=backend,
+                           opt_level=opt_level)
     shard = all_reduce(shard, node_axis, backend=backend, link=sel.DCN,
                        algo="allreduce_1pa" if nbytes <= small_message_bytes
-                       else None)
-    out = all_gather(shard, local_axis, backend=backend)
+                       else None, opt_level=opt_level)
+    out = all_gather(shard, local_axis, backend=backend, opt_level=opt_level)
     return out[:rows] if pad else out
 
 
@@ -167,7 +210,9 @@ def tree_all_reduce(tree, axis: str, *, backend: Optional[str] = None,
                     lane: int = 128, **kw):
     """Flatten a pytree into one (rows, 128) buffer, all_reduce once,
     unflatten. Bucket fusion amortizes per-collective latency over the
-    whole gradient set — the same reason NCCL fuses small tensors."""
+    whole gradient set — the same reason NCCL fuses small tensors.
+    Keyword args (``opt_level``, ``algo``, ``link``) forward to
+    ``all_reduce``."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         return tree

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import primitives as prim
+from repro import compat
 
 __all__ = [
     "Protocol",
@@ -116,13 +117,7 @@ class MemoryChannel(Channel):
 
         Returns the payload; consumes no semaphore (the LL latency win).
         """
-        def cond(_):
-            return flag_ref[0, 0] != flag_value
-
-        def body(carry):
-            return carry
-
-        jax.lax.while_loop(cond, body, jnp.int32(0))
+        prim.poll_flag(flag_ref, flag_value)
         return dst_ref[...]
 
     def drain_ll(self, dst_ref, flag_dst_ref) -> None:
@@ -164,7 +159,7 @@ class FusedReduceChannel:
 
     def broadcast(self, src_ref, dst_slots_ref, my_id=None) -> None:
         """Push src into `dst_slots_ref[my_id]` on every peer."""
-        num = jax.lax.axis_size(self.axis)
+        num = compat.axis_size(self.axis)
         me = jax.lax.axis_index(self.axis) if my_id is None else my_id
 
         def body(i, _):
@@ -189,7 +184,7 @@ class FusedReduceChannel:
 
     def reduce(self, out_ref, local_ref, slots_ref, my_id=None) -> None:
         """Wait for N-1 pushed chunks, then out = local + sum(slots)."""
-        num = jax.lax.axis_size(self.axis)
+        num = compat.axis_size(self.axis)
         me = jax.lax.axis_index(self.axis) if my_id is None else my_id
 
         def wait_body(i, _):

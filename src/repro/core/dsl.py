@@ -20,6 +20,15 @@ implement it differently (semaphores vs. collective data dependence) —
 the separation of declaration from implementation that the paper
 argues for.
 
+Between declaration and execution sits the optimizer
+(``repro.core.passes``): ``Program -> Program`` rewrites — put
+coalescing, sync batching, dead-copy elimination, chunk-split
+pipelining — that produce the multi-chunk instruction forms
+(``Instr.dsts``/``tos``/``frms``) both executors consume. Programs
+written by hand never contain those forms; ``Instr.put_triples()`` /
+``wait_chunks()`` give a uniform view over single and fused
+instructions.
+
 Example (all-pairs ReduceScatter, paper Fig. 5)::
 
     p = Program("allpairs_rs", chunks=dict(input=N, scratch=N, output=1))
@@ -42,7 +51,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 __all__ = [
     "RANK", "PEER", "CONST", "IndexExpr",
-    "Program", "Round", "Instr", "Op",
+    "Program", "Round", "Instr", "Op", "full_fanout",
 ]
 
 
@@ -51,33 +60,62 @@ __all__ = [
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class IndexExpr:
-    """Index/rank expression: ``(sign * rank + offset) mod axis_size``
-    when ``relative`` else the constant ``offset``."""
+    """Index/rank expression ``scale * base + post`` with
+    ``base = (sign * rank + offset) mod axis_size`` when ``relative``
+    else the constant ``offset``.
+
+    ``scale``/``post`` are produced by the chunk-split pipelining pass
+    (``passes.split_chunks``): sub-chunk ``j`` of logical chunk ``e``
+    over a buffer split ``S`` ways lives at ``S*e + j`` (chunk-major,
+    so the flat payload layout is unchanged). Hand-written programs
+    leave them at the identity (1, 0).
+    """
 
     sign: int = 0          # coefficient of `rank` (0, +1, -1)
     offset: int = 0
     relative: bool = True  # False -> plain constant (no mod)
+    scale: int = 1         # sub-chunk stride (chunk-split pass)
+    post: int = 0          # sub-chunk offset (chunk-split pass)
 
     def __call__(self, rank: Any, n: Any):
         """Evaluate for concrete/traced rank. Works on ints and jax values."""
         if not self.relative:
-            return self.offset
-        return (self.sign * rank + self.offset) % n
+            return self.scale * self.offset + self.post
+        return self.scale * ((self.sign * rank + self.offset) % n) + self.post
 
     def shift(self) -> int:
         """For put targets: the uniform ring shift this expression encodes
-        (requires sign=+1)."""
-        if not (self.relative and self.sign == 1):
+        (requires sign=+1 and identity scale/post — rank addressing is
+        never sub-chunk-split)."""
+        if not (self.relative and self.sign == 1
+                and self.scale == 1 and self.post == 0):
             raise ValueError(f"not a uniform shift: {self}")
         return self.offset
 
+    def is_static(self) -> bool:
+        """True when the index is rank-independent: it folds to a Python
+        int at trace time (the executors' static-index fast path)."""
+        return not self.relative or self.sign == 0
+
+    def split(self, factor: int, stream: int) -> "IndexExpr":
+        """The expression addressing sub-chunk ``stream`` after the
+        owning buffer is split ``factor`` ways (chunk-major layout)."""
+        return dataclasses.replace(
+            self, scale=self.scale * factor, post=self.post * factor + stream)
+
     def __repr__(self):
         if not self.relative:
-            return f"{self.offset}"
-        s = {1: "rank", -1: "-rank", 0: ""}[self.sign]
-        if self.offset:
-            s += f"{self.offset:+d}"
-        return f"({s})%N"
+            base = f"{self.offset}"
+        else:
+            s = {1: "rank", -1: "-rank", 0: ""}[self.sign]
+            if self.offset:
+                s += f"{self.offset:+d}"
+            base = f"({s})%N"
+        if self.scale != 1:
+            base = f"{self.scale}*{base}"
+        if self.post:
+            base += f"+{self.post}"
+        return base
 
 
 RANK = IndexExpr(sign=1, offset=0)
@@ -121,6 +159,38 @@ class Instr:
     to: Optional[IndexExpr] = None    # PUT: destination rank
     frm: Optional[IndexExpr] = None   # WAIT: source rank (for sizing/debug)
     round_id: int = -1
+    # Multi-chunk forms, produced by the optimizer passes (never by the
+    # builder API):
+    #   * coalesced PUT — ``srcs``/``dsts`` hold k aligned chunk pairs
+    #     sharing one ``to`` shift (``dst`` is None); the XLA executor
+    #     lowers the group to ONE stacked ppermute.
+    #   * batched WAIT — ``dsts``/``frms`` hold the k per-chunk waits
+    #     collapsed into one round-boundary sync (paper §3.2.3).
+    dsts: Tuple[Tuple[str, IndexExpr], ...] = ()
+    frms: Tuple[IndexExpr, ...] = ()
+    tos: Tuple[IndexExpr, ...] = ()   # coalesced PUT: per-pair dest rank
+
+    # -- uniform accessors over single and multi forms ---------------------
+    def put_triples(self) -> List[Tuple[Tuple[str, IndexExpr],
+                                        Tuple[str, IndexExpr], IndexExpr]]:
+        """PUT as aligned (src_chunk, dst_chunk, to_rank) triples."""
+        if self.dsts:
+            tos = self.tos if self.tos else (self.to,) * len(self.dsts)
+            return list(zip(self.srcs, self.dsts, tos))
+        return [(self.srcs[0], self.dst, self.to)]
+
+    def wait_chunks(self) -> List[Tuple[Tuple[str, IndexExpr], IndexExpr]]:
+        """WAIT as (dst_chunk, frm_rank) pairs."""
+        if self.dsts:
+            return list(zip(self.dsts, self.frms))
+        return [(self.dst, self.frm)]
+
+    def chunk_refs(self) -> Tuple[Tuple[str, IndexExpr], ...]:
+        """Every (buffer, index) this instruction touches."""
+        refs = tuple(self.srcs) + tuple(self.dsts)
+        if self.dst is not None:
+            refs += (self.dst,)
+        return refs
 
     def __repr__(self):
         parts = [self.op.value]
@@ -128,11 +198,43 @@ class Instr:
             parts.append("src=" + ",".join(f"{b}[{i}]" for b, i in self.srcs))
         if self.dst:
             parts.append(f"dst={self.dst[0]}[{self.dst[1]}]")
+        if self.dsts:
+            parts.append("dst=" + ",".join(f"{b}[{i}]" for b, i in self.dsts))
         if self.to is not None:
             parts.append(f"to={self.to}")
+        if self.tos:
+            parts.append("to=" + ",".join(map(repr, self.tos)))
         if self.frm is not None:
             parts.append(f"frm={self.frm}")
+        if self.frms:
+            parts.append("frm=" + ",".join(map(repr, self.frms)))
         return " ".join(parts)
+
+
+def full_fanout(triples, n: int) -> Optional[Tuple[str, str]]:
+    """If put triples form a full fan-out round — single-chunk puts
+    covering every shift 1..n-1 exactly once, one (src, dst) buffer
+    pair, receiver-side placement ``dst[RANK-of-sender]`` — return
+    ``(src_buffer, dst_buffer)``, else None.
+
+    This is the ONE definition of the fan-out contract, shared by the
+    coalescing pass (mergability) and the XLA executor's lowering
+    classifier so the two can never drift apart.
+    """
+    if len(triples) != n - 1 or n <= 2:
+        return None
+    try:
+        shifts = sorted(to.shift() % n for _, _, to in triples)
+    except ValueError:
+        return None
+    if shifts != list(range(1, n)):
+        return None
+    sbs = {sb for (sb, _), _, _ in triples}
+    dbs = {db for _, (db, _), _ in triples}
+    dis = {di for _, (_, di), _ in triples}
+    if len(sbs) == 1 and len(dbs) == 1 and dis == {RANK}:
+        return next(iter(sbs)), next(iter(dbs))
+    return None
 
 
 @dataclasses.dataclass
@@ -218,7 +320,7 @@ class Program:
         """Static checks: buffer names exist, chunk indices in range for
         every concrete rank, every awaited chunk has a matching put."""
         for instr in self.instructions():
-            for b, i in (instr.srcs or ()) + ((instr.dst,) if instr.dst else ()):
+            for b, i in instr.chunk_refs():
                 if b not in self.chunks:
                     raise ValueError(f"unknown buffer {b!r} in {instr}")
                 for r in range(num_ranks):
@@ -229,23 +331,24 @@ class Program:
                             f"(rank {r}) in {instr}")
         # wait/put matching: for each WAIT on (buf, idx) from rank f(r),
         # some PUT must target (buf, idx') on `to`-rank with matching index.
-        puts = [i for i in self.instructions() if i.op is Op.PUT]
+        put_dsts = [(to, dst) for p in self.instructions()
+                    if p.op is Op.PUT for _, dst, to in p.put_triples()]
         for w in self.instructions():
             if w.op is not Op.WAIT:
                 continue
-            ok = False
-            for r in range(num_ranks):      # receiver rank
-                src_rank = w.frm(r, num_ranks)
-                want_idx = w.dst[1](r, num_ranks)
-                ok = any(
-                    p.to(src_rank, num_ranks) == r
-                    and p.dst[0] == w.dst[0]
-                    and p.dst[1](src_rank, num_ranks) == want_idx
-                    for p in puts
-                )
-                if not ok:
-                    raise ValueError(
-                        f"wait {w} (rank {r}) has no matching put")
+            for (wbuf, widx), frm in w.wait_chunks():
+                for r in range(num_ranks):      # receiver rank
+                    src_rank = frm(r, num_ranks)
+                    want_idx = widx(r, num_ranks)
+                    ok = any(
+                        to(src_rank, num_ranks) == r
+                        and db == wbuf
+                        and di(src_rank, num_ranks) == want_idx
+                        for to, (db, di) in put_dsts
+                    )
+                    if not ok:
+                        raise ValueError(
+                            f"wait {w} (rank {r}) has no matching put")
 
     def comm_stats(self, num_ranks: int, chunk_bytes: int) -> dict:
         """Analytical cost: per-device bytes sent and sync rounds —
@@ -255,19 +358,31 @@ class Program:
         (a put at shift s crosses min(s, N-s) ICI links on a torus) —
         the contention term that makes ring beat all-pairs at large
         sizes. Switched fabrics (DCN) should use ``bytes_per_rank``.
+
+        Multi-chunk instructions (post-optimizer) count every chunk
+        toward the byte terms but only once toward the instruction /
+        sync terms — that is exactly the fusion the α-β model should
+        see (``sync_steps`` drops when waits are batched;
+        ``put_instrs`` drops when puts are coalesced; bytes never do).
         """
         puts = [i for i in self.instructions() if i.op is Op.PUT]
         rounds_with_comm = {i.round_id for i in puts}
         n = num_ranks
         wire = 0
+        chunk_puts = 0
         for p in puts:
-            s = p.to.shift() % n
-            wire += chunk_bytes * min(s, n - s)
+            for _, _, to in p.put_triples():
+                s = to.shift() % n
+                chunk_puts += 1
+                wire += chunk_bytes * min(s, n - s)
         return dict(
-            puts_per_rank=len(puts),
-            bytes_per_rank=len(puts) * chunk_bytes,
+            puts_per_rank=chunk_puts,
+            put_instrs=len(puts),
+            bytes_per_rank=chunk_puts * chunk_bytes,
             wire_bytes_per_rank=wire,
             comm_rounds=len(rounds_with_comm),
+            sync_steps=sum(1 for i in self.instructions()
+                           if i.op is Op.WAIT),
             barriers=sum(1 for i in self.instructions() if i.op is Op.BARRIER),
         )
 

@@ -6,12 +6,35 @@ declaration vs. implementation separation):
 * ``PallasExecutor`` — generates a TPU kernel whose instructions are the
   MSCCL++ channel primitives (put/wait/barrier as remote DMAs and
   semaphores). Paper-faithful; runs on TPU hardware or the interpret
-  emulator.
-* ``XlaExecutor``   — lowers each uniform-shift put to
-  ``jax.lax.ppermute`` and local chunk ops to jnp. Portable to any XLA
-  backend; used inside the pjit'd model code and the multi-pod dry-run.
-  Synchronization instructions (wait/flush/barrier) erase to data
-  dependence, which XLA enforces structurally.
+  emulator. Consumes optimizer output directly: a coalesced multi-chunk
+  put issues its DMAs back-to-back on one semaphore pair, a batched
+  wait spins its chunk set at one program point.
+* ``XlaExecutor``   — lowers put rounds to ``jax.lax`` collectives and
+  local chunk ops to jnp. Portable to any XLA backend; used inside the
+  pjit'd model code and the multi-pod dry-run. Synchronization
+  instructions (wait/flush/barrier) erase to data dependence, which
+  XLA enforces structurally.
+
+The XLA executor has two modes:
+
+* ``vectorize=False`` — the reference lowering: every chunk-put is its
+  own ``ppermute``, every chunk access its own dynamic slice. This is
+  the ``opt_level=0`` baseline benchmarks compare against.
+* ``vectorize=True`` (default) — a cached *lowering plan* (keyed on
+  (program, n), built once per program) classifies each put
+  instruction and emits the cheapest collective:
+
+  - a full fan-out put whose every peer receives its own chunk lowers
+    to ONE ``jax.lax.all_to_all`` (all-pairs RS / AllToAll rounds);
+  - a full fan-out put whose every peer receives the same chunk lowers
+    to ONE ``jax.lax.all_gather`` (1PA broadcast, AG phases);
+  - a coalesced same-shift group lowers to ONE stacked ``ppermute``
+    over the chunk-stacked payload (pipelined ring rounds);
+  - reductions gather their operand chunks with one ``take`` per
+    contiguous operand run, then left-fold in declaration order, so
+    results stay bit-identical to the reference lowering;
+  - any rank-independent ``IndexExpr`` (``is_static()``) folds to a
+    Python int at trace time and uses static slicing.
 
 Both operate on 2D chunk payloads: the caller supplies ``x`` shaped
 ``(chunks_in * rows, cols)`` and receives ``(chunks_out * rows, cols)``.
@@ -19,17 +42,19 @@ Both operate on 2D chunk payloads: the caller supplies ``x`` shaped
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
+import weakref
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from repro.core import primitives as prim
 from repro.core.channels import MemoryChannel
-from repro.core.dsl import Instr, Op, Program
+from repro.core.dsl import IndexExpr, Instr, Op, Program, full_fanout
 
 __all__ = ["XlaExecutor", "PallasExecutor", "execute"]
 
@@ -40,21 +65,268 @@ __all__ = ["XlaExecutor", "PallasExecutor", "execute"]
 _NUM_SEM_PAIRS = 4
 
 
+# ---------------------------------------------------------------------------
+# lowering plan (vectorized XLA path)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _PutAction:
+    """One lowered put instruction.
+
+    kind: 'a2a' (one all_to_all), 'gather' (one all_gather), or
+    'groups' (one stacked ppermute per same-shift triple group).
+    """
+
+    kind: str
+    sb: str = ""
+    db: str = ""
+    src_expr: Optional[IndexExpr] = None
+    groups: Tuple[Tuple[int, Tuple], ...] = ()   # (shift, triples)
+
+
+def _group_by_shift(triples, n) -> Tuple[Tuple[int, Tuple], ...]:
+    groups: List[Tuple[int, List]] = []
+    for t in triples:
+        s = t[2].shift() % n
+        if groups and groups[-1][0] == s:
+            groups[-1][1].append(t)
+        else:
+            groups.append((s, [t]))
+    return tuple((s, tuple(ts)) for s, ts in groups)
+
+
+def _classify_put(instr: Instr, n: int, chunks: dict) -> _PutAction:
+    triples = instr.put_triples()
+    fo = full_fanout(triples, n) if len(triples) > 1 else None
+    if fo is not None:
+        sb, db = fo
+        if chunks[db] == n:
+            # pattern A: each peer receives its own chunk (src index ==
+            # destination rank) -> all_to_all
+            if (chunks[sb] == n
+                    and all(si == to for (_, si), _, to in triples)):
+                return _PutAction("a2a", sb=sb, db=db)
+            # pattern B: every peer receives the same chunk -> all_gather
+            sis = {si for (_, si), _, _ in triples}
+            if len(sis) == 1:
+                return _PutAction("gather", sb=sb, db=db,
+                                  src_expr=next(iter(sis)))
+    return _PutAction("groups", groups=_group_by_shift(triples, n))
+
+
+# weak identity memo: library programs stay planned for the process
+# lifetime, user-built programs are released with their last reference
+_PLAN_MEMO: "weakref.WeakKeyDictionary[Program, dict]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _lowering_plan(program: Program, n: int):
+    """Per-(program, n) classification of every PUT instruction,
+    memoized so repeated jit traces of one collective reuse the plan."""
+    memo = _PLAN_MEMO.setdefault(program, {})
+    if n not in memo:
+        memo[n] = {
+            id(instr): _classify_put(instr, n, program.chunks)
+            for instr in program.instructions() if instr.op is Op.PUT
+        }
+    return memo[n]
+
+
+def _slab(exprs: Sequence[IndexExpr]) -> Optional[IndexExpr]:
+    """If ``exprs`` address k contiguous sub-chunks ``k*base + j``
+    (j = 0..k-1) of one split buffer, return the base expression —
+    the whole group then moves as one dynamic slice."""
+    k = len(exprs)
+    e0 = exprs[0]
+    if e0.scale != k or e0.post != 0:
+        return None
+    for j, e in enumerate(exprs):
+        if dataclasses.replace(e, post=0) != dataclasses.replace(e0, post=0) \
+                or e.post != j:
+            return None
+    return dataclasses.replace(e0, scale=1, post=0)
+
+
 class XlaExecutor:
     """Interpret a Program with jax.lax collectives (portable path)."""
 
-    def __init__(self, program: Program, axis: str):
+    def __init__(self, program: Program, axis: str, *, vectorize: bool = True):
         self.program = program.freeze() if not program._frozen else program
         self.axis = axis
+        self.vectorize = vectorize
 
+    # -- shared helpers ----------------------------------------------------
+    def _idx(self, e: IndexExpr, me, n):
+        """Chunk index: a Python int when rank-independent (static
+        fast path), else a traced value."""
+        return e(0, n) if e.is_static() else e(me, n)
+
+    def _get(self, bufs, b, e, me, n):
+        if e.is_static():
+            return bufs[b][e(0, n)]
+        return jax.lax.dynamic_index_in_dim(bufs[b], e(me, n), axis=0,
+                                            keepdims=False)
+
+    def _set(self, bufs, b, e, val, me, n):
+        val = val.astype(bufs[b].dtype)
+        if e.is_static():
+            bufs[b] = bufs[b].at[e(0, n)].set(val)
+        else:
+            bufs[b] = jax.lax.dynamic_update_index_in_dim(
+                bufs[b], val, e(me, n), axis=0)
+        return bufs
+
+    # -- reference (opt_level=0 style) put lowering ------------------------
+    def _run_put_reference(self, bufs, instr, me, n):
+        for (sb, si), (db, di), to in instr.put_triples():
+            shift = to.shift()
+            val = jax.lax.dynamic_index_in_dim(
+                bufs[sb], si(me, n), axis=0, keepdims=False)
+            perm = [(r, (r + shift) % n) for r in range(n)]
+            val = jax.lax.ppermute(val, self.axis, perm)
+            sender = (me - shift) % n
+            bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                bufs[db], val.astype(bufs[db].dtype), di(sender, n), axis=0)
+        return bufs
+
+    # -- vectorized put lowering -------------------------------------------
+    def _run_put_vectorized(self, bufs, action: _PutAction, me, n):
+        axis = self.axis
+        if action.kind == "a2a":
+            # peer j's chunk-for-me is its bufs[sb][me]; one collective
+            # moves the whole round. Restore my own slot afterwards: a
+            # real put never targets self, so slot `me` must keep its
+            # pre-round value for bit-equivalence.
+            out = jax.lax.all_to_all(bufs[action.sb], axis,
+                                     split_axis=0, concat_axis=0,
+                                     tiled=False)
+            prev_own = jax.lax.dynamic_index_in_dim(
+                bufs[action.db], me, axis=0, keepdims=False)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out.astype(bufs[action.db].dtype), prev_own, me, axis=0)
+            bufs[action.db] = out
+            return bufs
+        if action.kind == "gather":
+            val = self._get(bufs, action.sb, action.src_expr, me, n)
+            g = jax.lax.all_gather(val, axis)          # g[j] = rank j's val
+            prev_own = jax.lax.dynamic_index_in_dim(
+                bufs[action.db], me, axis=0, keepdims=False)
+            g = jax.lax.dynamic_update_index_in_dim(
+                g.astype(bufs[action.db].dtype), prev_own, me, axis=0)
+            bufs[action.db] = g
+            return bufs
+        for shift, triples in action.groups:
+            bufs = self._run_shift_group(bufs, shift, triples, me, n)
+        return bufs
+
+    def _run_shift_group(self, bufs, shift, triples, me, n):
+        """One stacked ppermute for k same-shift chunk puts."""
+        axis = self.axis
+        sender = (me - shift) % n
+        if len(triples) == 1:
+            (sb, si), (db, di), _ = triples[0]
+            val = self._get(bufs, sb, si, me, n)
+            val = jax.lax.ppermute(
+                val, axis, [(r, (r + shift) % n) for r in range(n)])
+            val = val.astype(bufs[db].dtype)
+            if di.is_static():
+                bufs[db] = bufs[db].at[di(0, n)].set(val)
+            else:
+                bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                    bufs[db], val, di(sender, n), axis=0)
+            return bufs
+
+        srcs = [t[0] for t in triples]
+        dsts = [t[1] for t in triples]
+        sb0, db0 = srcs[0][0], dsts[0][0]
+        src_slab = _slab([e for _, e in srcs]) \
+            if all(b == sb0 for b, _ in srcs) else None
+        dst_slab = _slab([e for _, e in dsts]) \
+            if all(b == db0 for b, _ in dsts) else None
+        k = len(triples)
+
+        if src_slab is not None:
+            start = k * self._idx(src_slab, me, n)
+            stacked = jax.lax.dynamic_slice_in_dim(bufs[sb0], start, k, axis=0)
+        else:
+            stacked = jnp.stack(
+                [self._get(bufs, b, e, me, n) for b, e in srcs])
+        stacked = jax.lax.ppermute(
+            stacked, axis, [(r, (r + shift) % n) for r in range(n)])
+        if dst_slab is not None:
+            start = k * (dst_slab(0, n) if dst_slab.is_static()
+                         else dst_slab(sender, n))
+            bufs[db0] = jax.lax.dynamic_update_slice_in_dim(
+                bufs[db0], stacked.astype(bufs[db0].dtype), start, axis=0)
+        else:
+            for i, (db, di) in enumerate(dsts):
+                val = stacked[i].astype(bufs[db].dtype)
+                if di.is_static():
+                    bufs[db] = bufs[db].at[di(0, n)].set(val)
+                else:
+                    bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                        bufs[db], val, di(sender, n), axis=0)
+        return bufs
+
+    # -- reduce lowering ----------------------------------------------------
+    def _reduce_operands(self, bufs, srcs, me, n):
+        """Operand values in declaration order, gathering contiguous
+        same-buffer runs with one ``take`` each (vectorized mode)."""
+        vals: List[Any] = []
+        i = 0
+        while i < len(srcs):
+            b, e = srcs[i]
+            j = i + 1
+            while (j < len(srcs) and srcs[j][0] == b
+                   and srcs[j][1].sign == e.sign
+                   and srcs[j][1].relative == e.relative
+                   and srcs[j][1].scale == e.scale
+                   and srcs[j][1].post == e.post):
+                j += 1
+            run = srcs[i:j]
+            if len(run) == 1:
+                vals.append(self._get(bufs, b, e, me, n))
+            else:
+                offs = np.array([se.offset for _, se in run])
+                if e.is_static():
+                    if e.relative:
+                        idx = e.scale * (offs % n) + e.post
+                    else:
+                        idx = e.scale * offs + e.post
+                    stacked = bufs[b][np.asarray(idx)]
+                else:
+                    idx = e.scale * ((e.sign * me + offs) % n) + e.post
+                    stacked = jnp.take(bufs[b], idx, axis=0)
+                vals += [stacked[t] for t in range(len(run))]
+            i = j
+        return vals
+
+    def _run_reduce(self, bufs, instr, me, n, vectorize: bool):
+        db, di = instr.dst
+        if vectorize:
+            vals = self._reduce_operands(bufs, list(instr.srcs), me, n)
+        else:
+            vals = [jax.lax.dynamic_index_in_dim(bufs[b], e(me, n), axis=0,
+                                                 keepdims=False)
+                    for b, e in instr.srcs]
+        acc = vals[0]
+        for v in vals[1:]:    # left fold: bit-identical to the reference
+            acc = acc + v
+        if vectorize:
+            return self._set(bufs, db, di, acc, me, n)
+        bufs[db] = jax.lax.dynamic_update_index_in_dim(
+            bufs[db], acc.astype(bufs[db].dtype), di(me, n), axis=0)
+        return bufs
+
+    # -- entry point ---------------------------------------------------------
     def __call__(self, x: jax.Array) -> jax.Array:
         p = self.program
         axis = self.axis
-        n = jax.lax.axis_size(axis)
+        n = compat.axis_size(axis)
         me = jax.lax.axis_index(axis)
         n_in = p.chunks[p.in_buffer]
         rows = x.shape[0] // n_in
         cols = x.shape[1]
+        plan = _lowering_plan(p, n) if self.vectorize else None
 
         bufs: dict[str, jax.Array] = {}
         for name, k in p.chunks.items():
@@ -65,35 +337,26 @@ class XlaExecutor:
 
         for instr in p.instructions():
             if instr.op is Op.PUT:
-                sb, si = instr.srcs[0]
-                db, di = instr.dst
-                shift = instr.to.shift()  # uniform ring shift (validated)
-                val = jax.lax.dynamic_index_in_dim(
-                    bufs[sb], si(me, n), axis=0, keepdims=False)
-                perm = [(r, (r + shift) % n) for r in range(n)]
-                val = jax.lax.ppermute(val, axis, perm)
-                # receiver places at di(sender) with sender = me - shift
-                sender = (me - shift) % n
-                bufs[db] = jax.lax.dynamic_update_index_in_dim(
-                    bufs[db], val.astype(bufs[db].dtype), di(sender, n), axis=0)
+                if plan is not None:
+                    bufs = self._run_put_vectorized(
+                        bufs, plan[id(instr)], me, n)
+                else:
+                    bufs = self._run_put_reference(bufs, instr, me, n)
             elif instr.op in (Op.WAIT, Op.FLUSH, Op.BARRIER):
                 continue  # data dependence IS the synchronization here
             elif instr.op is Op.COPY:
                 sb, si = instr.srcs[0]
                 db, di = instr.dst
-                val = jax.lax.dynamic_index_in_dim(
-                    bufs[sb], si(me, n), axis=0, keepdims=False)
-                bufs[db] = jax.lax.dynamic_update_index_in_dim(
-                    bufs[db], val, di(me, n), axis=0)
-            elif instr.op is Op.REDUCE:
-                db, di = instr.dst
-                acc = None
-                for sb, si in instr.srcs:
+                if self.vectorize:
+                    val = self._get(bufs, sb, si, me, n)
+                    bufs = self._set(bufs, db, di, val, me, n)
+                else:
                     val = jax.lax.dynamic_index_in_dim(
                         bufs[sb], si(me, n), axis=0, keepdims=False)
-                    acc = val if acc is None else acc + val
-                bufs[db] = jax.lax.dynamic_update_index_in_dim(
-                    bufs[db], acc, di(me, n), axis=0)
+                    bufs[db] = jax.lax.dynamic_update_index_in_dim(
+                        bufs[db], val, di(me, n), axis=0)
+            elif instr.op is Op.REDUCE:
+                bufs = self._run_reduce(bufs, instr, me, n, self.vectorize)
             else:  # pragma: no cover
                 raise NotImplementedError(instr.op)
 
@@ -102,7 +365,15 @@ class XlaExecutor:
 
 
 class PallasExecutor:
-    """Trace a Program into a Pallas TPU kernel over channel primitives."""
+    """Trace a Program into a Pallas TPU kernel over channel primitives.
+
+    Understands the optimizer's multi-chunk forms: a coalesced put
+    issues its k DMAs consecutively on the round's semaphore pair; a
+    batched wait performs its k recv-waits at one program point (the
+    byte-credit accounting stays per-descriptor — DMA semaphores count
+    bytes — but the *program* now synchronizes once per round, so
+    fewer put rounds means fewer semaphore pairs and barrier wraps).
+    """
 
     def __init__(self, program: Program, axis: str, *, collective_id: int = 7,
                  interpret=None):
@@ -110,38 +381,39 @@ class PallasExecutor:
         self.axis = axis
         self.collective_id = collective_id
         self.interpret = interpret
-        # programs are built for a concrete axis size; the largest chunked
-        # buffer carries it (input/scratch/output have n chunks)
-        self._n_hint = max(self.program.chunks.values())
 
     # -- static analysis ----------------------------------------------------
-    def _wait_put_rounds(self, n_hint: int = 8):
-        """Map each WAIT instr (by id) to the round of its matching PUT —
-        the wait must spin on the semaphore pair that put signals.
-        Programs are rank-symmetric, so matching at rank 0 suffices."""
+    def _wait_put_rounds(self, n: int):
+        """Map each WAIT instr (by id) to the rounds of its chunks'
+        matching PUTs — the wait must spin on the semaphore pair that
+        put signals. Programs are rank-symmetric, so matching at rank 0
+        suffices."""
         p = self.program
-        puts = [i for i in p.instructions() if i.op is Op.PUT]
-        mapping = {}
-        n = n_hint
+        put_dsts = [(put.round_id, to, dst) for put in p.instructions()
+                    if put.op is Op.PUT for _, dst, to in put.put_triples()]
+        mapping: dict = {}
         for w in p.instructions():
             if w.op is not Op.WAIT:
                 continue
-            src_rank = w.frm(0, n)
-            want_idx = w.dst[1](0, n)
-            for put in puts:
-                if (put.to(src_rank, n) % n == 0 and put.dst[0] == w.dst[0]
-                        and put.dst[1](src_rank, n) == want_idx):
-                    mapping[id(w)] = put.round_id
-                    break
-            else:
-                raise ValueError(f"wait {w} has no matching put")
+            rounds = []
+            for (wbuf, widx), frm in w.wait_chunks():
+                src_rank = frm(0, n)
+                want_idx = widx(0, n)
+                for rid, to, (db, di) in put_dsts:
+                    if (to(src_rank, n) % n == 0 and db == wbuf
+                            and di(src_rank, n) == want_idx):
+                        rounds.append(rid)
+                        break
+                else:
+                    raise ValueError(f"wait {w} has no matching put")
+            mapping[id(w)] = rounds
         return mapping
 
     # -- kernel body --------------------------------------------------------
     def _kernel(self, x_ref, out_ref, scratch, bar_sem, *sems):
         p = self.program
         axis = self.axis
-        n = jax.lax.axis_size(axis)
+        n = compat.axis_size(axis)
         me = jax.lax.axis_index(axis)
         prim.start_barrier(axis)
 
@@ -158,7 +430,7 @@ class PallasExecutor:
         put_rounds = sorted({i.round_id for i in p.instructions()
                              if i.op is Op.PUT})
         round_to_pair = {r: i % _NUM_SEM_PAIRS for i, r in enumerate(put_rounds)}
-        wait_to_round = self._wait_put_rounds(self._n_hint)
+        wait_to_rounds = self._wait_put_rounds(n)
         wrap = len(put_rounds) > _NUM_SEM_PAIRS
 
         for ri, rnd in enumerate(p.rounds):
@@ -168,19 +440,19 @@ class PallasExecutor:
             for instr in rnd.instrs:
                 if instr.op is Op.PUT:
                     send_sem, recv_sem = sem_pairs[round_to_pair[ri]]
-                    sb, si = instr.srcs[0]
-                    db, di = instr.dst
-                    shift = instr.to.shift()
-                    peer = (me + shift) % n
-                    chan = MemoryChannel(axis, peer, send_sem, recv_sem)
-                    chan.put(refs[sb].at[si(me, n)],
-                             refs[db].at[di(me, n)]).flush()
+                    for (sb, si), (db, di), to in instr.put_triples():
+                        shift = to.shift()
+                        peer = (me + shift) % n
+                        chan = MemoryChannel(axis, peer, send_sem, recv_sem)
+                        chan.put(refs[sb].at[si(me, n)],
+                                 refs[db].at[di(me, n)]).flush()
                 elif instr.op is Op.WAIT:
-                    send_sem, recv_sem = sem_pairs[
-                        round_to_pair[wait_to_round[id(instr)]]]
-                    db, di = instr.dst
-                    prim.wait_recv_into(refs[db].at[di(me, n)],
-                                        send_sem, recv_sem, {axis: me})
+                    for (dst, _), rid in zip(instr.wait_chunks(),
+                                             wait_to_rounds[id(instr)]):
+                        send_sem, recv_sem = sem_pairs[round_to_pair[rid]]
+                        db, di = dst
+                        prim.wait_recv_into(refs[db].at[di(me, n)],
+                                            send_sem, recv_sem, {axis: me})
                 elif instr.op is Op.FLUSH:
                     continue  # puts are flushed at issue in this executor
                 elif instr.op is Op.BARRIER:
@@ -234,17 +506,28 @@ class PallasExecutor:
             out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
             scratch_shapes=scratch_shapes,
             interpret=interpret,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=compat.CompilerParams(
                 collective_id=self.collective_id),
         )(x.reshape(1, n_in, rows, cols))
         return out.reshape(n_out * rows, cols)
 
 
 def execute(program: Program, x: jax.Array, *, axis: str,
-            backend: str = "xla", **kw) -> jax.Array:
-    """Run a DSL program on a local shard inside shard_map."""
+            backend: str = "xla", opt_level: Optional[int] = None,
+            **kw) -> jax.Array:
+    """Run a DSL program on a local shard inside shard_map.
+
+    ``opt_level``: when given, the program is first run through
+    ``passes.optimize`` (None = run exactly as passed). Level 0
+    additionally selects the reference (non-vectorized) XLA lowering —
+    the before/after baseline the benchmarks measure.
+    """
+    if opt_level is not None:
+        from repro.core import passes
+        program = passes.optimize(program, opt_level)
     if backend == "xla":
-        return XlaExecutor(program, axis)(x)
+        vectorize = opt_level is None or opt_level > 0
+        return XlaExecutor(program, axis, vectorize=vectorize)(x)
     if backend == "pallas":
         return PallasExecutor(program, axis, **kw)(x)
     raise ValueError(f"unknown backend {backend!r}")

@@ -25,13 +25,18 @@ class LinkModel:
     alpha_us: float       # per-round latency
     beta_GBps: float      # per-device injection bandwidth
     torus: bool = True    # point-to-point torus: puts pay hop distance
+    sync_us: float = 0.2  # per EXTRA sync step beyond one per round
+                          # (semaphore completion check, << alpha)
 
-    def time_us(self, rounds: int, bytes_on_wire: int) -> float:
-        return rounds * self.alpha_us + bytes_on_wire / (self.beta_GBps * 1e3)
+    def time_us(self, rounds: int, bytes_on_wire: int,
+                extra_syncs: int = 0) -> float:
+        return (rounds * self.alpha_us + extra_syncs * self.sync_us
+                + bytes_on_wire / (self.beta_GBps * 1e3))
 
 
-ICI = LinkModel(alpha_us=1.0, beta_GBps=50.0, torus=True)
-DCN = LinkModel(alpha_us=10.0, beta_GBps=6.25, torus=False)  # switched
+ICI = LinkModel(alpha_us=1.0, beta_GBps=50.0, torus=True, sync_us=0.2)
+DCN = LinkModel(alpha_us=10.0, beta_GBps=6.25, torus=False,  # switched
+                sync_us=1.0)
 
 # Candidate algorithms per collective (paper's default library §4.4).
 _CANDIDATES = {
@@ -43,18 +48,31 @@ _CANDIDATES = {
 
 
 def estimate_us(algo_name: str, n: int, nbytes: int,
-                link: LinkModel = ICI) -> float:
+                link: LinkModel = ICI,
+                opt_level: Optional[int] = None) -> float:
     """α-β estimate for one algorithm instance on an n-rank axis.
 
-    ``nbytes`` is the full (unsharded) message size per device.
+    ``nbytes`` is the full (unsharded) message size per device. The
+    program is costed in its *post-optimizer* form (the form the
+    executors actually run at ``opt_level``, default pipeline level):
+    the α term pays one ``alpha_us`` per comm round plus ``sync_us``
+    per *extra* sync step beyond one per round — so a round whose
+    per-chunk waits are batched (paper §3.2.3) pays one round cost,
+    while at ``opt_level=0`` the same program pays for every chunk
+    wait. The β term counts wire bytes, which fusion never changes.
     """
-    prog = algos.REGISTRY[algo_name](n)
+    from repro.core import passes  # local import: passes imports dsl only
+    prog = passes.optimize(algos.REGISTRY[algo_name](n),
+                           passes.DEFAULT_OPT_LEVEL if opt_level is None
+                           else opt_level, n)
     n_in = prog.chunks[prog.in_buffer]
     chunk_bytes = max(nbytes // n_in, 1)
     stats = prog.comm_stats(n, chunk_bytes)
     bytes_key = "wire_bytes_per_rank" if link.torus else "bytes_per_rank"
     return link.time_us(stats["comm_rounds"] + stats["barriers"],
-                        stats[bytes_key])
+                        stats[bytes_key],
+                        extra_syncs=max(0, stats["sync_steps"]
+                                        - stats["comm_rounds"]))
 
 
 @dataclasses.dataclass

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api as coll_api
+from repro import compat
 
 __all__ = ["moe_layer_ep"]
 
@@ -36,7 +37,7 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     p["router"]: (d, e_total) replicated.
     """
     b, s, d = x.shape
-    ep = jax.lax.axis_size(axis)
+    ep = compat.axis_size(axis)
     e_total = p["router"].shape[-1]
     e_local = e_total // ep
     k = cfg.moe.top_k

@@ -20,7 +20,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import api as coll_api
@@ -96,6 +96,14 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
             return params, opt_state, dict(metrics, loss=l)
 
     elif mode == "explicit":
+        from repro import compat
+        if not compat.HAS_PARTIAL_MANUAL_SHARD_MAP:
+            # The legacy auto= spelling aborts the whole process inside
+            # XLA's SPMD partitioner — fail loudly and catchably instead.
+            raise NotImplementedError(
+                "mode='explicit' needs partial-manual shard_map "
+                "(jax with shard_map axis_names=); this jax only has the "
+                "legacy auto= spelling, which crashes XLA on this pattern")
         # Gradients are computed per-DP-shard inside a shard_map that is
         # MANUAL over the dp axes (model stays auto/GSPMD for TP), then
         # reduced by OUR collectives: 2PH hierarchical across (pod, data)

@@ -27,6 +27,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import primitives as prim
 from repro.core.channels import MemoryChannel, Protocol
 from repro.kernels import comm_utils
+from repro import compat
 
 __all__ = ["all_reduce_1pa", "ar_1pa_kernel"]
 
@@ -34,7 +35,7 @@ __all__ = ["all_reduce_1pa", "ar_1pa_kernel"]
 def ar_1pa_kernel(x_ref, flag_val_ref, out_ref, scratch, flags, flag_src,
                   send_sem, recv_sem, bar_sem, *, axis: str, use_ll: bool):
     prim.start_barrier(axis)
-    num = jax.lax.axis_size(axis)
+    num = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
     flag_value = flag_val_ref[0]
 
@@ -56,10 +57,7 @@ def ar_1pa_kernel(x_ref, flag_val_ref, out_ref, scratch, flags, flag_src,
     def wait_body(i, _):
         peer = jax.lax.rem(me + i, num)
         if use_ll:
-            def cond(c):
-                return flags[peer, 0, 0] != flag_value
-
-            jax.lax.while_loop(cond, lambda c: c, jnp.int32(0))
+            prim.poll_flag(flags, flag_value, index=(peer, 0, 0))
         else:
             prim.wait_recv_into(scratch.at[peer], send_sem, recv_sem, {axis: me})
         return ()
@@ -117,5 +115,5 @@ def all_reduce_1pa(x, *, axis: str, axis_size: int, use_ll: bool = True,
             pltpu.SemaphoreType.REGULAR,
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(collective_id=3),
+        compiler_params=compat.CompilerParams(collective_id=3),
     )(x[None], flag_value.reshape(1))

@@ -10,6 +10,7 @@ import numpy as np
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.primitives import INTERPRET_PARAMS
+from repro import compat
 
 __all__ = ["interpret_mode", "on_tpu", "ring_neighbors", "check_2d"]
 
@@ -26,7 +27,7 @@ def interpret_mode():
 
 def ring_neighbors(axis: str):
     """(prev, next) logical ring neighbors along a mesh axis."""
-    num = jax.lax.axis_size(axis)
+    num = compat.axis_size(axis)
     me = jax.lax.axis_index(axis)
     return jax.lax.rem(me - 1 + num, num), jax.lax.rem(me + 1, num)
 

@@ -6,12 +6,15 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.roofline import analysis, hlo_parse
 
 
 def _mesh4():
-    return jax.make_mesh((4,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # Auto is the modern default; legacy jax has no axis_types at all.
+    axis_types = (jax.sharding.AxisType.Auto,) \
+        if hasattr(jax.sharding, "AxisType") else None
+    return compat.make_mesh((4,), ("x",), axis_types=axis_types)
 
 
 def test_dot_flops_exact():
@@ -43,9 +46,13 @@ def test_scan_trip_count_multiplies():
 def test_collective_bytes_counted():
     mesh = _mesh4()
     A = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    # out_shardings pins the replicated output; without it some jax
+    # versions let SPMD propagation keep the output sharded and elide
+    # the all-gather this test is about.
     f = jax.jit(lambda a: jax.lax.with_sharding_constraint(
         a, NamedSharding(mesh, P(None, None))),
-        in_shardings=NamedSharding(mesh, P("x", None)))
+        in_shardings=NamedSharding(mesh, P("x", None)),
+        out_shardings=NamedSharding(mesh, P(None, None)))
     st = hlo_parse.analyze(f.lower(A).compile().as_text())
     assert st.coll["all-gather"] == pytest.approx(1024 * 1024 * 4, rel=0.01)
     assert st.coll["ici"] > 0 and st.coll["dcn"] == 0
