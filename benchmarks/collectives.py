@@ -40,8 +40,13 @@ from repro.core.executor import execute
 
 SIZES = [1 << 10, 1 << 14, 1 << 17, 1 << 20, 1 << 24]  # bytes
 OPT_SIZES = [1 << 14, 1 << 17, 1 << 20]                # opt A/B points
-OPT_ALGOS = ["allpairs_rs", "allpairs_ag", "allreduce_1pa",
-             "allreduce_2pa", "alltoall"]              # all-pairs family
+# all-pairs family (drives the O0->O2 geomean headline) + the ring
+# variants, so every selectable collective has >= 2 measured candidates
+# per size — the coverage TuningTable.from_bench needs to build entries
+# for all_gather / reduce_scatter, not just all_reduce.
+ALLPAIRS_ALGOS = ["allpairs_rs", "allpairs_ag", "allreduce_1pa",
+                  "allreduce_2pa", "alltoall"]
+OPT_ALGOS = ALLPAIRS_ALGOS + ["ring_rs", "ring_ag"]
 N = 8
 
 
@@ -101,6 +106,7 @@ def bench_allreduce(rows: list, points=None):
             if points is not None:
                 points.append(dict(bench="allreduce", nbytes=nbytes,
                                    backend=backend, algo=algo,
+                                   opt_level=passes.DEFAULT_OPT_LEVEL,
                                    wall_us=round(us, 1),
                                    predicted_us=round(pred, 2)))
 
@@ -128,6 +134,7 @@ def bench_allgather(rows: list, points=None):
             if points is not None:
                 points.append(dict(bench="allgather", nbytes=nbytes,
                                    backend=backend, algo=algo,
+                                   opt_level=passes.DEFAULT_OPT_LEVEL,
                                    wall_us=round(us, 1),
                                    predicted_us=round(pred, 2)))
 
@@ -158,7 +165,7 @@ def bench_opt_levels(rows: list, points=None, opt_level: int = 2):
             popt = passes.optimize(prog, opt_level, N)
             point = dict(
                 bench="opt_compare", algo=name, nbytes=nbytes,
-                opt_level=opt_level,
+                backend="xla", opt_level=opt_level,
                 wall_us_ref=round(us0, 1), wall_us_opt=round(us1, 1),
                 speedup=round(us0 / us1, 3),
                 instrs_ref=len(prog.instructions()),
@@ -167,7 +174,8 @@ def bench_opt_levels(rows: list, points=None, opt_level: int = 2):
                 collectives_opt=_count_collectives(f1, x),
                 predicted_us=round(sel.estimate_us(name, N, nbytes), 2),
             )
-            speedups.append(us0 / us1)
+            if name in ALLPAIRS_ALGOS:
+                speedups.append(us0 / us1)
             rows.append((f"opt_{name}", nbytes, "xla",
                          f"O0:{point['collectives_ref']}c"
                          f"->O{opt_level}:{point['collectives_opt']}c",
@@ -203,6 +211,48 @@ def gain_breakdown(rows: list, points=None):
         if points is not None:
             points.append(dict(bench="stats", algo=name,
                                pre=st, post=sto))
+
+
+def plan_smoke(sizes=(1 << 10, 1 << 14)) -> dict:
+    """Fast plan-path smoke (``run.py --smoke`` / ``check.sh --smoke``):
+    drives the Communicator/ExecutionPlan pipeline end-to-end at two
+    tiny sizes and asserts the compile-once contract — one selector/
+    passes run per distinct key, cache hits on re-trace — so plan-path
+    regressions surface per PR in seconds, not the full bench's minutes.
+    """
+    from repro.core import comm as comm_lib
+
+    mesh = _mesh()
+    comm = comm_lib.Communicator("x", n=N)
+    points = []
+    for nbytes in sizes:
+        cols = max(nbytes // 4 // 128, 1)
+        x = jnp.ones((N, 128, cols), jnp.float32)
+
+        def run(xs):
+            return comm.all_reduce(xs[0], backend="xla")[None]
+
+        def jit_run():
+            return jax.jit(shard_map(run, mesh=mesh,
+                                     in_specs=P("x", None, None),
+                                     out_specs=P("x", None, None),
+                                     check_vma=False))
+
+        us = _time(jit_run(), x)
+        # a fresh jit of the same shape must hit the plan cache
+        jax.block_until_ready(jit_run()(x))
+        plan = comm.compile("all_reduce", (128, cols), jnp.float32,
+                            backend="xla")
+        points.append(dict(bench="plan_smoke", nbytes=nbytes, backend="xla",
+                           algo=plan.algo, opt_level=plan.opt_level,
+                           wall_us=round(us, 1),
+                           predicted_us=round(plan.estimate_us, 2)))
+    compiles, hits = comm.stats["compiles"], comm.stats["hits"]
+    assert compiles == len(sizes), \
+        f"expected {len(sizes)} plan compiles, got {compiles}"
+    assert hits >= 2 * len(sizes), \
+        f"expected >= {2 * len(sizes)} plan-cache hits, got {hits}"
+    return dict(n=N, compiles=compiles, hits=hits, points=points)
 
 
 def main(rows=None, points=None):

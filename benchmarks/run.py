@@ -14,9 +14,16 @@ Default: prints ``name,arg,...`` CSV rows (μs where timing applies).
 
 ``--json``: runs the collectives section only and writes
 ``BENCH_collectives.json`` next to the repo root — wall time,
-predicted µs, and DSL/collective instruction counts per point, plus
-the O0→O2 geomean speedup of the all-pairs family. CI keeps this file
-so the perf trajectory of the optimizer pipeline is tracked per PR.
+predicted µs, and backend/opt_level/algorithm metadata plus
+DSL/collective instruction counts per point, and the O0→O2 geomean
+speedup of the all-pairs family. CI keeps this file so the perf
+trajectory of the optimizer pipeline is tracked per PR. The payload
+also feeds deployment tuning: ``selector.fit_link_model`` and
+``TuningTable.from_bench`` consume it (see Communicator.load_bench_tuning).
+
+``--smoke``: seconds-fast Communicator/ExecutionPlan plan-path check
+(compile-once contract + tiny timed points); wired into
+``scripts/check.sh --smoke`` so plan regressions surface per PR.
 """
 import json
 import pathlib
@@ -30,6 +37,17 @@ if str(_ROOT) not in sys.path:
 
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        from benchmarks import collectives
+
+        payload = collectives.plan_smoke()
+        for p in payload["points"]:
+            print(f"plan_smoke nbytes={p['nbytes']} algo={p['algo']} "
+                  f"O{p['opt_level']} wall={p['wall_us']}us "
+                  f"pred={p['predicted_us']}us")
+        print(f"plan cache: {payload['compiles']} compiles, "
+              f"{payload['hits']} hits — compile-once OK")
+        return
     if "--json" in argv:
         from benchmarks import collectives
 

@@ -1,11 +1,15 @@
-"""Quickstart: the three MSCCL++ API levels on an emulated 8-chip node.
+"""Quickstart: the MSCCL++ API levels on an emulated 8-chip node.
 
     python examples/quickstart.py
 
-1. Collective API  — drop-in all_reduce, algorithm auto-selected;
-2. DSL API         — the same algorithm declared in 20 lines and run on
+1. Collective API  — drop-in all_reduce, algorithm auto-selected
+                     (thin wrapper over a process-default Communicator);
+2. Communicator    — the production surface: compile an ExecutionPlan
+                     once, inspect its cost card, replay it every step
+                     (see examples/communicator.py for the full tour);
+3. DSL API         — the same algorithm declared in 20 lines and run on
                      both executors (ppermute and Pallas channels);
-3. Primitive API   — the raw put/signal/wait kernel (see
+4. Primitive API   — the raw put/signal/wait kernel (see
                      src/repro/kernels/ for production versions).
 """
 import os
@@ -39,7 +43,21 @@ for backend in ("xla_native", "xla", "pallas"):
     algo = selector.choose("all_reduce", n=N, nbytes=x[0].nbytes)
     print(f"[collective] backend={backend:10s} algo={algo:16s} max_err={err:.2e}")
 
-# -- 2. DSL API: declare a custom one-hop reduce-scatter ---------------------
+# -- 2. Communicator: compile once, execute many -----------------------------
+from repro.core.comm import Communicator
+
+comm = Communicator("x", n=N, backend="xla")
+plan = comm.compile("all_reduce", (128, 256), x.dtype)
+print(f"[comm] compiled {plan}")
+f = jax.jit(shard_map(lambda xs: plan(xs[0])[None], mesh=mesh,
+                      in_specs=P("x", None, None),
+                      out_specs=P("x", None, None), check_vma=False))
+for _ in range(3):
+    out = f(x)                      # pure plan replay — no re-planning
+err = float(jnp.max(jnp.abs(out[0] - want)))
+print(f"[comm] 3 executions, max_err={err:.2e}, stats={comm.stats}")
+
+# -- 3. DSL API: declare a custom one-hop reduce-scatter ---------------------
 prog = Program("my_rs", chunks=dict(input=N, scratch=N, output=1))
 with prog.round():
     for i in range(1, N):
@@ -63,7 +81,7 @@ for backend in ("xla", "pallas"):
     err = float(jnp.max(jnp.abs(y - ref)))
     print(f"[dsl] executor={backend:7s} reduce-scatter max_err={err:.2e}")
 
-# -- 3. algorithm selection table --------------------------------------------
+# -- 4. algorithm selection table --------------------------------------------
 print("\n[selector] AllReduce policy (v5e ICI):")
 for exp in (10, 13, 16, 19, 22, 26, 30):
     algo = selector.choose("all_reduce", n=N, nbytes=1 << exp)

@@ -37,6 +37,16 @@ def main():
 
     eng = Engine(cfg, params, mesh,
                  ServeConfig(batch=args.batch, max_kv=256, temperature=0.8))
+    # decode-step plans were compiled at engine init (§5.2: plan once)
+    # — inspect algorithm choice and predicted comm cost before serving
+    # a single request (the GSPMD decode path makes these cost cards,
+    # not the executed kernels, for now — see ROADMAP)
+    report = eng.plan_report()
+    for name, card in report["plans"].items():
+        print(f"plan[{name}]: {card['algo']} O{card['opt_level']} "
+              f"est={card['estimate_us']}us")
+    print(f"predicted comm/token: {report['predicted_comm_us_per_token']}us "
+          f"({cfg.n_layers} layers)")
     prompts = np.random.RandomState(0).randint(
         0, cfg.vocab, (args.batch, 12)).astype(np.int32)
 

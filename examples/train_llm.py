@@ -62,6 +62,10 @@ def main():
     print(f"final loss: {res['losses'][-1]:.4f}  "
           f"mean step: {res['mean_step_s']:.3f}s  "
           f"stragglers: {res['stragglers']}")
+    if res["plan_stats"]:
+        # explicit mode: the DP communicators' compile-once record —
+        # every gradient shape planned exactly once, then replayed
+        print(f"dp plan caches: {res['plan_stats']}")
 
 
 if __name__ == "__main__":

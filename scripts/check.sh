@@ -1,6 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the command every PR must keep green
 # (see ROADMAP.md). Run from anywhere.
+#
+#   scripts/check.sh            # full pytest suite (args pass through)
+#   scripts/check.sh --smoke    # seconds-fast Communicator plan-path
+#                               # bench smoke (compile-once contract)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "--smoke" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke "$@"
+  exit 0
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,10 +1,11 @@
 """repro.core — MSCCL++ on TPU: primitives, channels, DSL, optimizer
-passes, executors, algorithm library, selector, and the NCCL-shaped
-Collective API."""
+passes, executors, algorithm library, selector, the Communicator /
+ExecutionPlan planning layer, and the NCCL-shaped Collective API."""
 from repro.core import (  # noqa: F401
     algorithms,
     api,
     channels,
+    comm,
     dsl,
     executor,
     passes,

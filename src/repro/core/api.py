@@ -1,15 +1,27 @@
 """MSCCL++ Collective API — the drop-in top layer (paper §4.4).
 
-NCCL-shaped collectives callable *inside* ``shard_map``. Each call:
+NCCL-shaped collectives callable *inside* ``shard_map``. Since the
+Communicator/ExecutionPlan redesign this module is a thin veneer: every
+function delegates to a process-default :class:`repro.core.comm.Communicator`
+for its axis, which
 
-1. consults the selector (size → algorithm, paper §5.1 policy),
-2. executes the chosen DSL program on one of three backends:
-   - ``"xla"``    — DSL lowered to ppermute rounds (portable; default
-                    off-TPU and in the multi-pod dry-run),
-   - ``"pallas"`` — DSL traced to a channel-primitive TPU kernel
-                    (paper-faithful; default on TPU),
-   - ``"xla_native"`` — plain ``jax.lax`` collectives; this is the
-                    NCCL-role baseline every benchmark compares against.
+1. consults the selector ONCE per distinct (collective, shape, dtype,
+   n, backend, algo, opt_level) key — size → algorithm, paper §5.1
+   policy, overridable via a ``TuningTable`` installed on the
+   communicator — and
+2. caches the resulting :class:`~repro.core.comm.ExecutionPlan` (the
+   post-optimizer program + prepared executor lowering + cost card), so
+   repeated calls are pure plan replay: the ``passes`` pipeline, the
+   selector, and executor construction run zero additional times.
+
+Backends:
+
+- ``"xla"``    — DSL lowered to ppermute/collective rounds (portable;
+                 default off-TPU and in the multi-pod dry-run),
+- ``"pallas"`` — DSL traced to a channel-primitive TPU kernel
+                 (paper-faithful; default on TPU),
+- ``"xla_native"`` — plain ``jax.lax`` collectives; the NCCL-role
+                 baseline every benchmark compares against (no plan).
 
 Payloads are 2D ``(rows, cols)``; ``tree_all_reduce`` adds NCCL-style
 bucket fusion for parameter/grad pytrees (flatten → one fat collective
@@ -17,190 +29,106 @@ bucket fusion for parameter/grad pytrees (flatten → one fat collective
 
 Every collective takes an ``opt_level`` (default
 ``passes.DEFAULT_OPT_LEVEL``): the selected DSL program runs through
-the ``repro.core.passes`` optimizer pipeline before lowering —
-dead-copy elimination and sync batching at 1, put coalescing (one
-collective per fused round on the xla backend) at 2, chunk-split
-pipelining for ring programs at 3. Level 0 runs the program exactly as
-declared through the reference per-chunk lowering — the benchmarks'
-before/after baseline.
+the ``repro.core.passes`` optimizer pipeline before lowering, and the
+selector costs candidates in that same post-optimizer form. Level 0
+keeps the reference per-chunk lowering — the benchmarks' baseline.
+
+Production deployments (serve engine, train step, MoE dispatch) should
+hold an explicit :class:`~repro.core.comm.Communicator` and compile
+their plans at init — the paper's §5.2 deployment shape; these
+module-level functions remain for drop-in ergonomics and one-off use.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Any, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import algorithms as algos
-from repro.core import passes
+from repro.core import comm as comm_lib
 from repro.core import selector as sel
-from repro.core.executor import XlaExecutor, PallasExecutor
-from repro import compat
+from repro.core.comm import (Communicator, ExecutionPlan, default_backend,
+                             default_communicator)
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all",
     "broadcast", "hierarchical_all_reduce", "tree_all_reduce",
-    "default_backend",
+    "default_backend", "compile_plan", "communicator",
+    "Communicator", "ExecutionPlan",
 ]
 
-_COLLECTIVE_IDS = {  # stable barrier-semaphore ids per collective type
-    "all_reduce": 8, "all_gather": 9, "reduce_scatter": 10,
-    "all_to_all": 11, "broadcast": 12,
-}
+
+def communicator(axis: str) -> Communicator:
+    """The process-default Communicator backing this module's functions
+    for ``axis`` (install a TuningTable on it, inspect its plan cache)."""
+    return default_communicator(axis)
 
 
-def default_backend() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
-
-
-def _axis_size(axis: str) -> int:
-    return compat.axis_size(axis)
-
-
-def _prepare(prog, n: int, opt_level: Optional[int], rows: Optional[int] = None):
-    """Resolve the opt level and run the optimizer (cached in passes).
-    Returns (program, level).
-
-    ``rows``: the caller's payload rows. Chunk-split (level 3)
-    multiplies the input chunk count; when ``rows`` is not divisible by
-    the split count the level falls back to the un-split pipeline
-    instead of producing a broken reshape downstream (collectives whose
-    output layout embeds the chunk grid cannot simply pad like
-    ``all_reduce`` does).
-    """
-    level = passes.DEFAULT_OPT_LEVEL if opt_level is None else opt_level
-    opt = passes.optimize(prog, level, n)
-    while (rows is not None and level > 2
-           and rows % opt.chunks[opt.in_buffer] != 0):
-        level -= 1
-        opt = passes.optimize(prog, level, n)
-    return opt, level
-
-
-def _run(prog, x, axis: str, backend: str, coll: str, opt_level: int):
-    if backend == "pallas":
-        return PallasExecutor(prog, axis,
-                              collective_id=_COLLECTIVE_IDS[coll])(x)
-    return XlaExecutor(prog, axis, vectorize=opt_level > 0)(x)
-
-
-def _choose(coll: str, n: int, nbytes: int, algo: Optional[str],
-            link: sel.LinkModel) -> str:
-    return algo or sel.choose(coll, n=n, nbytes=nbytes, link=link)
+def compile_plan(collective: str, shape, dtype, axis: str,
+                 **kw) -> ExecutionPlan:
+    """Compile (or fetch) an ExecutionPlan on the default communicator.
+    Outside traced code pass ``n=`` (the axis size) explicitly."""
+    return default_communicator(axis).compile(collective, shape, dtype, **kw)
 
 
 # ---------------------------------------------------------------------------
 # collectives (call inside shard_map)
 # ---------------------------------------------------------------------------
 def all_reduce(x, axis: str, *, backend: Optional[str] = None,
-               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+               algo: Optional[str] = None,
+               link: Optional[sel.LinkModel] = None,
                opt_level: Optional[int] = None):
     """x: (rows, cols) -> same shape, summed over `axis`."""
-    backend = backend or default_backend()
-    if backend == "xla_native":
-        return jax.lax.psum(x, axis)
-    n = _axis_size(axis)
-    name = _choose("all_reduce", n, x.size * x.dtype.itemsize, algo, link)
-    prog, level = _prepare(algos.REGISTRY[name](n), n, opt_level)
-    # pad AFTER optimization: chunk-split multiplies the chunk count
-    n_in = prog.chunks[prog.in_buffer]
-    rows = x.shape[0]
-    pad = (-rows) % n_in
-    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
-    out = _run(prog, xp, axis, backend, "all_reduce", level)
-    return out[:rows] if pad else out
+    return default_communicator(axis).all_reduce(
+        x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
 
 def all_gather(x, axis: str, *, backend: Optional[str] = None,
-               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+               algo: Optional[str] = None,
+               link: Optional[sel.LinkModel] = None,
                opt_level: Optional[int] = None):
     """x: (rows, cols) shard -> (N*rows, cols) gathered (tiled order)."""
-    backend = backend or default_backend()
-    if backend == "xla_native":
-        return jax.lax.all_gather(x, axis, tiled=True)
-    n = _axis_size(axis)
-    name = _choose("all_gather", n, x.size * x.dtype.itemsize * n, algo, link)
-    prog, level = _prepare(algos.REGISTRY[name](n), n, opt_level,
-                           rows=x.shape[0])
-    return _run(prog, x, axis, backend, "all_gather", level)
+    return default_communicator(axis).all_gather(
+        x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
 
 def reduce_scatter(x, axis: str, *, backend: Optional[str] = None,
-                   algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+                   algo: Optional[str] = None,
+                   link: Optional[sel.LinkModel] = None,
                    opt_level: Optional[int] = None):
     """x: (N*rows, cols) -> (rows, cols): my reduced row-block."""
-    backend = backend or default_backend()
-    if backend == "xla_native":
-        return jax.lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
-    n = _axis_size(axis)
-    name = _choose("reduce_scatter", n, x.size * x.dtype.itemsize, algo, link)
-    prog, level = _prepare(algos.REGISTRY[name](n), n, opt_level,
-                           rows=x.shape[0])
-    return _run(prog, x, axis, backend, "reduce_scatter", level)
+    return default_communicator(axis).reduce_scatter(
+        x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
 
 def all_to_all(x, axis: str, *, backend: Optional[str] = None,
-               algo: Optional[str] = None, link: sel.LinkModel = sel.ICI,
+               algo: Optional[str] = None,
+               link: Optional[sel.LinkModel] = None,
                opt_level: Optional[int] = None):
     """x: (N*rows, cols): row-block b -> device b; returns blocks
-    received from each device, stacked."""
-    backend = backend or default_backend()
-    if backend == "xla_native":
-        n = _axis_size(axis)
-        xs = x.reshape(n, x.shape[0] // n, x.shape[1])
-        out = jax.lax.all_to_all(xs, axis, split_axis=0, concat_axis=0,
-                                 tiled=False)
-        return out.reshape(x.shape)
-    n = _axis_size(axis)
-    prog, level = _prepare(algos.REGISTRY["alltoall"](n), n, opt_level,
-                           rows=x.shape[0])
-    return _run(prog, x, axis, backend, "all_to_all", level)
+    received from each device, stacked. ``algo`` routes through the
+    selector's candidate set (unknown names raise)."""
+    return default_communicator(axis).all_to_all(
+        x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
 
 def broadcast(x, axis: str, root: int = 0, *, backend: Optional[str] = None,
-              link: sel.LinkModel = sel.ICI,
+              link: Optional[sel.LinkModel] = None,
               opt_level: Optional[int] = None):
     """x: (rows, cols) -> root's buffer on every device."""
-    backend = backend or default_backend()
-    if backend == "xla_native":
-        # mask + sum is the standard SPMD broadcast
-        me = jax.lax.axis_index(axis)
-        masked = jnp.where(me == root, x, jnp.zeros_like(x))
-        return jax.lax.psum(masked, axis)
-    n = _axis_size(axis)
-    prog, level = _prepare(algos.broadcast_allpairs(n, root), n, opt_level,
-                           rows=x.shape[0])
-    return _run(prog, x, axis, backend, "broadcast", level)
+    return default_communicator(axis).broadcast(
+        x, root=root, backend=backend, link=link, opt_level=opt_level)
 
 
 def hierarchical_all_reduce(x, *, local_axis: str, node_axis: str,
                             backend: Optional[str] = None,
                             small_message_bytes: int = 1 << 20,
                             opt_level: Optional[int] = None):
-    """2PH AllReduce (paper §4.4-2PH): RS(local) → AR(node) → AG(local).
-
-    The cross-node phase moves 1/L of the data (L = local axis size) —
-    the pod-boundary bandwidth saving that motivates the hierarchy.
-    For small messages the LL-styled variant skips the local RS split
-    granularity trade-off by using 1PA locally (paper's first 2PH
-    variant); for large, ring/all-pairs per the selector.
-    """
-    backend = backend or default_backend()
-    lnum = _axis_size(local_axis)
-    rows = x.shape[0]
-    nbytes = x.size * x.dtype.itemsize
-    pad = (-rows) % lnum
-    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
-
-    shard = reduce_scatter(xp, local_axis, backend=backend,
-                           opt_level=opt_level)
-    shard = all_reduce(shard, node_axis, backend=backend, link=sel.DCN,
-                       algo="allreduce_1pa" if nbytes <= small_message_bytes
-                       else None, opt_level=opt_level)
-    out = all_gather(shard, local_axis, backend=backend, opt_level=opt_level)
-    return out[:rows] if pad else out
+    """2PH AllReduce (paper §4.4-2PH): RS(local) → AR(node) → AG(local),
+    over the default communicators of the two axes (the cross-node hop
+    is costed on the DCN link model)."""
+    return comm_lib.hierarchical_all_reduce(
+        x, local=default_communicator(local_axis),
+        node=default_communicator(node_axis), node_link=sel.DCN,
+        backend=backend, small_message_bytes=small_message_bytes,
+        opt_level=opt_level)
 
 
 # ---------------------------------------------------------------------------
@@ -213,18 +141,5 @@ def tree_all_reduce(tree, axis: str, *, backend: Optional[str] = None,
     whole gradient set — the same reason NCCL fuses small tensors.
     Keyword args (``opt_level``, ``algo``, ``link``) forward to
     ``all_reduce``."""
-    leaves, treedef = jax.tree.flatten(tree)
-    if not leaves:
-        return tree
-    dtype = jnp.result_type(*leaves)
-    sizes = [leaf.size for leaf in leaves]
-    flat = jnp.concatenate([leaf.reshape(-1).astype(dtype) for leaf in leaves])
-    pad = (-flat.size) % lane
-    flat = jnp.pad(flat, (0, pad))
-    buf = flat.reshape(-1, lane)
-    red = all_reduce(buf, axis, backend=backend, **kw).reshape(-1)
-    out, off = [], 0
-    for leaf, size in zip(leaves, sizes):
-        out.append(red[off:off + size].reshape(leaf.shape).astype(leaf.dtype))
-        off += size
-    return jax.tree.unflatten(treedef, out)
+    return default_communicator(axis).tree_all_reduce(
+        tree, backend=backend, lane=lane, **kw)

@@ -1,0 +1,484 @@
+"""Communicator + ExecutionPlan — compile once, execute many.
+
+The paper's production story (§4.4, §5.2) is not "call a function":
+channels, algorithm choice, and optimized programs are set up ONCE and
+amortized over millions of invocations (every decode step of a serving
+engine re-runs the same AllReduce). This module is that separation:
+
+* :class:`Communicator` — owns an axis, its :class:`~.selector.LinkModel`,
+  an optional :class:`~.selector.TuningTable`, default backend /
+  ``opt_level``, and a **plan cache** keyed by
+  ``(collective, shape, dtype, n, backend, algo, opt_level, link[, root])``.
+* :class:`ExecutionPlan` — a frozen artifact bundling the
+  post-optimizer :class:`~.dsl.Program`, the chosen algorithm, the
+  prepared executor lowering (``XlaExecutor.prepare`` /
+  ``PallasExecutor.prepare``), pad/reshape metadata, and its
+  ``estimate_us`` / ``comm_stats`` cost card. Plans are inspectable
+  (``cost_card()``) and serializable (``to_json`` / ``from_json``) à la
+  MSCCL++ execution-plan files.
+
+``comm.compile("all_reduce", shape, dtype)`` returns a plan; calling
+``plan(x)`` (or ``comm.all_reduce(x)``, which compiles-or-hits-cache)
+executes it with zero re-planning inside traced code: the ``passes``
+pipeline, the selector, and executor lowering-plan construction all run
+exactly once per cache key.
+
+The module-level functions in :mod:`repro.core.api` are thin wrappers
+over per-axis process-default communicators (:func:`default_communicator`),
+preserving the drop-in NCCL-shaped surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core import algorithms as algos
+from repro.core import passes
+from repro.core import selector as sel
+from repro.core.dsl import Program, program_from_dict, program_to_dict
+from repro.core.executor import PallasExecutor, XlaExecutor
+
+__all__ = [
+    "Communicator", "ExecutionPlan", "default_communicator",
+    "default_backend", "reset_default_communicators",
+    "hierarchical_all_reduce", "PLAN_FORMAT_VERSION",
+]
+
+PLAN_FORMAT_VERSION = 1
+
+_COLLECTIVE_IDS = {  # stable barrier-semaphore ids per collective type
+    "all_reduce": 8, "all_gather": 9, "reduce_scatter": 10,
+    "all_to_all": 11, "broadcast": 12,
+}
+
+#: collectives whose output keeps the caller's row count, so rows that
+#: don't divide the chunk grid can be padded and sliced back. The others
+#: embed the chunk grid in their output layout and instead fall back to
+#: an un-split pipeline level (and reject non-divisible rows outright).
+_PADDABLE = frozenset({"all_reduce", "broadcast"})
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve_algo(collective: str, n: int, nbytes: int,
+                  algo: Optional[str], link: sel.LinkModel,
+                  table: Optional[sel.TuningTable],
+                  opt_level: Optional[int]) -> str:
+    """Explicit ``algo`` (validated against the candidate set) or the
+    selector's pick — costed at the opt level that will actually run."""
+    cands = sel.CANDIDATES[collective]
+    if algo is not None:
+        if algo not in cands:
+            raise ValueError(
+                f"unknown algorithm {algo!r} for {collective!r}; "
+                f"expected one of {cands}")
+        return algo
+    return sel.choose(collective, n=n, nbytes=nbytes, link=link,
+                      table=table, opt_level=opt_level)
+
+
+def _build_executor(program: Program, axis: str, collective: str,
+                    backend: str, opt_level: int, n: int):
+    if backend == "pallas":
+        return PallasExecutor(
+            program, axis,
+            collective_id=_COLLECTIVE_IDS[collective]).prepare(n)
+    return XlaExecutor(program, axis, vectorize=opt_level > 0).prepare(n)
+
+
+@dataclasses.dataclass(frozen=True, eq=False, repr=False)
+class ExecutionPlan:
+    """A compiled, frozen, executable collective (see module docstring).
+
+    ``opt_level`` is the level actually applied (it can fall below
+    ``requested_opt_level`` when chunk-split would not divide the
+    caller's rows); ``pad`` is the number of padding rows applied before
+    execution and sliced off after (paddable collectives only).
+    """
+
+    collective: str
+    algo: str
+    axis: str
+    n: int
+    shape: Tuple[int, int]
+    dtype: str
+    backend: str
+    opt_level: int
+    requested_opt_level: int
+    root: Optional[int]
+    pad: int
+    link: sel.LinkModel
+    estimate_us: float
+    comm_stats: Dict[str, int]
+    program: Program
+    executor: Any
+
+    # -- execution ---------------------------------------------------------
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Execute on a local shard inside shard_map. Pure replay: no
+        selection, no passes, no lowering-plan construction."""
+        if tuple(x.shape) != tuple(self.shape):
+            raise ValueError(
+                f"plan compiled for shape {self.shape}, got {tuple(x.shape)}")
+        if np.dtype(x.dtype) != np.dtype(self.dtype):
+            raise ValueError(
+                f"plan compiled for dtype {self.dtype}, got {x.dtype}")
+        if self.pad:
+            x = jnp.pad(x, ((0, self.pad), (0, 0)))
+        out = self.executor(x)
+        if self.pad:
+            out = out[: self.shape[0]]
+        return out
+
+    # -- inspection --------------------------------------------------------
+    def cost_card(self) -> dict:
+        """The plan's analytic cost summary (the selector's view)."""
+        return dict(collective=self.collective, algo=self.algo, n=self.n,
+                    shape=tuple(self.shape), dtype=self.dtype,
+                    backend=self.backend, opt_level=self.opt_level,
+                    estimate_us=round(self.estimate_us, 3),
+                    **self.comm_stats)
+
+    def __repr__(self):
+        return (f"ExecutionPlan({self.collective}/{self.algo} n={self.n} "
+                f"shape={tuple(self.shape)} dtype={self.dtype} "
+                f"backend={self.backend} O{self.opt_level} "
+                f"est={self.estimate_us:.2f}us)")
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self, **json_kw) -> str:
+        """Serialize the whole plan (program included) to JSON — the
+        MSCCL++ execution-plan-file shape: portable, diffable,
+        loadable without re-running selection or the pass pipeline."""
+        json_kw.setdefault("indent", 2)
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(dict(
+            format=PLAN_FORMAT_VERSION,
+            collective=self.collective, algo=self.algo, axis=self.axis,
+            n=self.n, shape=list(self.shape), dtype=self.dtype,
+            backend=self.backend, opt_level=self.opt_level,
+            requested_opt_level=self.requested_opt_level,
+            root=self.root, pad=self.pad,
+            link=dict(alpha_us=self.link.alpha_us,
+                      beta_GBps=self.link.beta_GBps,
+                      torus=self.link.torus, sync_us=self.link.sync_us),
+            estimate_us=self.estimate_us,
+            comm_stats=dict(self.comm_stats),
+            program=program_to_dict(self.program),
+        ), **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        d = json.loads(s)
+        if d.get("format") != PLAN_FORMAT_VERSION:
+            raise ValueError(f"unsupported plan format {d.get('format')!r}")
+        program = program_from_dict(d["program"])
+        executor = _build_executor(program, d["axis"], d["collective"],
+                                   d["backend"], d["opt_level"], d["n"])
+        return cls(
+            collective=d["collective"], algo=d["algo"], axis=d["axis"],
+            n=d["n"], shape=tuple(d["shape"]), dtype=d["dtype"],
+            backend=d["backend"], opt_level=d["opt_level"],
+            requested_opt_level=d["requested_opt_level"],
+            root=d["root"], pad=d["pad"],
+            link=sel.LinkModel(**d["link"]),
+            estimate_us=d["estimate_us"],
+            comm_stats=dict(d["comm_stats"]),
+            program=program, executor=executor)
+
+
+class Communicator:
+    """Init-once planning object for one mesh axis (see module docstring).
+
+    ``n`` (the axis size) may be given up front — required for
+    compiling plans *outside* traced code (e.g. at engine init). When
+    omitted it is resolved per call from the live axis environment
+    (inside shard_map), so one default communicator serves meshes of
+    any size on the same axis name.
+    """
+
+    def __init__(self, axis: str, *, n: Optional[int] = None,
+                 link: sel.LinkModel = sel.ICI,
+                 table: Optional[sel.TuningTable] = None,
+                 backend: Optional[str] = None,
+                 opt_level: Optional[int] = None):
+        self.axis = axis
+        self.n = n
+        self.link = link
+        self.table = table
+        self.backend = backend
+        self.opt_level = opt_level
+        self._plans: Dict[tuple, ExecutionPlan] = {}
+        self.stats = {"compiles": 0, "hits": 0}
+
+    # -- configuration -----------------------------------------------------
+    def set_tuning_table(self, table: Optional[sel.TuningTable]) -> None:
+        """Install (or clear) a deployment tuning table. Invalidate the
+        plan cache: cached algorithm choices may no longer apply."""
+        self.table = table
+        self._plans.clear()
+
+    def load_bench_tuning(self, payload, *, fit_link: bool = True) -> None:
+        """Install measured tuning from a ``BENCH_collectives.json``
+        payload (path or dict): a measured-fastest ``TuningTable`` and,
+        optionally, fitted α/β link constants."""
+        if not isinstance(payload, dict):
+            with open(payload) as f:
+                payload = json.load(f)
+        if fit_link:
+            self.link = sel.fit_link_model(payload, base=self.link)
+        self.set_tuning_table(sel.TuningTable.from_bench(payload))
+
+    # -- planning ----------------------------------------------------------
+    def _axis_size(self, n: Optional[int]) -> int:
+        if n is not None:
+            return n
+        if self.n is not None:
+            return self.n
+        return compat.axis_size(self.axis)
+
+    def compile(self, collective: str, shape, dtype, *,
+                algo: Optional[str] = None, backend: Optional[str] = None,
+                opt_level: Optional[int] = None, root: int = 0,
+                link: Optional[sel.LinkModel] = None,
+                n: Optional[int] = None) -> ExecutionPlan:
+        """Compile (or fetch from cache) the plan for one collective
+        instance. ``shape`` is the caller's 2D ``(rows, cols)`` payload
+        shape; selection, the pass pipeline, and executor lowering run
+        at most once per distinct cache key."""
+        backend = backend or self.backend or default_backend()
+        if backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"plans require a DSL backend ('xla'|'pallas'), "
+                f"got {backend!r}")
+        if collective not in _COLLECTIVE_IDS:
+            raise ValueError(f"unknown collective {collective!r}")
+        n = self._axis_size(n)
+        link = link or self.link
+        level_req = self.opt_level if opt_level is None else opt_level
+        level_req = passes.DEFAULT_OPT_LEVEL if level_req is None else level_req
+        rows, cols = (int(shape[0]), int(shape[1]))
+        dtype = np.dtype(dtype).name
+        key = (collective, (rows, cols), dtype, n, backend, algo, level_req,
+               link, root if collective == "broadcast" else None)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats["hits"] += 1
+            return plan
+        plan = self._build(collective, rows, cols, dtype, n, backend, algo,
+                           level_req, root, link)
+        self._plans[key] = plan
+        self.stats["compiles"] += 1
+        return plan
+
+    def _build(self, collective, rows, cols, dtype, n, backend, algo,
+               level_req, root, link) -> ExecutionPlan:
+        itemsize = np.dtype(dtype).itemsize
+        nbytes = rows * cols * itemsize
+        if collective == "all_gather":
+            nbytes *= n          # selection is on the full gathered message
+        if collective == "broadcast":
+            name = "broadcast_allpairs"
+            source = algos.broadcast_allpairs(n, root)
+        else:
+            name = _resolve_algo(collective, n, nbytes, algo, link,
+                                 self.table, level_req)
+            source = algos.REGISTRY[name](n)
+
+        # run the pass pipeline; chunk-split (O3) falls back when the
+        # caller's rows don't divide the split chunk grid (collectives
+        # whose output layout embeds the grid cannot pad)
+        level = level_req
+        prog = passes.optimize(source, level, n)
+        if collective not in _PADDABLE:
+            while level > 2 and rows % prog.chunks[prog.in_buffer] != 0:
+                level -= 1
+                prog = passes.optimize(source, level, n)
+            if level != level_req and algo is None:
+                # the selector ranked candidates under the chunk-split
+                # cost model; the plan will run unsplit — re-select at
+                # the level that actually executes
+                name = _resolve_algo(collective, n, nbytes, algo, link,
+                                     self.table, level)
+                source = algos.REGISTRY[name](n)
+                prog = passes.optimize(source, level, n)
+        n_in = prog.chunks[prog.in_buffer]
+        pad = (-rows) % n_in if collective in _PADDABLE else 0
+        if pad == 0 and rows % n_in != 0:
+            raise ValueError(
+                f"{collective} rows={rows} not divisible by the "
+                f"{n_in}-chunk input grid of {name!r} at n={n}")
+
+        stats = prog.comm_stats(n, max(nbytes // n_in, 1))
+        bytes_key = "wire_bytes_per_rank" if link.torus else "bytes_per_rank"
+        est = link.time_us(
+            stats["comm_rounds"] + stats["barriers"], stats[bytes_key],
+            extra_syncs=max(0, stats["sync_steps"] - stats["comm_rounds"]))
+        executor = _build_executor(prog, self.axis, collective, backend,
+                                   level, n)
+        return ExecutionPlan(
+            collective=collective, algo=name, axis=self.axis, n=n,
+            shape=(rows, cols), dtype=dtype, backend=backend,
+            opt_level=level, requested_opt_level=level_req,
+            root=root if collective == "broadcast" else None, pad=pad,
+            link=link, estimate_us=est, comm_stats=stats,
+            program=prog, executor=executor)
+
+    def plans(self) -> Dict[tuple, ExecutionPlan]:
+        """A snapshot of the plan cache (key -> plan)."""
+        return dict(self._plans)
+
+    def __repr__(self):
+        return (f"Communicator(axis={self.axis!r}, n={self.n}, "
+                f"backend={self.backend or default_backend()!r}, "
+                f"plans={len(self._plans)}, stats={self.stats})")
+
+    # -- collectives (call inside shard_map) -------------------------------
+    def all_reduce(self, x, *, backend: Optional[str] = None,
+                   algo: Optional[str] = None,
+                   link: Optional[sel.LinkModel] = None,
+                   opt_level: Optional[int] = None):
+        """x: (rows, cols) -> same shape, summed over the axis."""
+        backend = backend or self.backend or default_backend()
+        if backend == "xla_native":
+            return jax.lax.psum(x, self.axis)
+        return self.compile("all_reduce", x.shape, x.dtype, algo=algo,
+                            backend=backend, opt_level=opt_level,
+                            link=link)(x)
+
+    def all_gather(self, x, *, backend: Optional[str] = None,
+                   algo: Optional[str] = None,
+                   link: Optional[sel.LinkModel] = None,
+                   opt_level: Optional[int] = None):
+        """x: (rows, cols) shard -> (N*rows, cols) gathered (tiled)."""
+        backend = backend or self.backend or default_backend()
+        if backend == "xla_native":
+            return jax.lax.all_gather(x, self.axis, tiled=True)
+        return self.compile("all_gather", x.shape, x.dtype, algo=algo,
+                            backend=backend, opt_level=opt_level,
+                            link=link)(x)
+
+    def reduce_scatter(self, x, *, backend: Optional[str] = None,
+                       algo: Optional[str] = None,
+                       link: Optional[sel.LinkModel] = None,
+                       opt_level: Optional[int] = None):
+        """x: (N*rows, cols) -> (rows, cols): my reduced row-block."""
+        backend = backend or self.backend or default_backend()
+        if backend == "xla_native":
+            return jax.lax.psum_scatter(x, self.axis, scatter_dimension=0,
+                                        tiled=True)
+        return self.compile("reduce_scatter", x.shape, x.dtype, algo=algo,
+                            backend=backend, opt_level=opt_level,
+                            link=link)(x)
+
+    def all_to_all(self, x, *, backend: Optional[str] = None,
+                   algo: Optional[str] = None,
+                   link: Optional[sel.LinkModel] = None,
+                   opt_level: Optional[int] = None):
+        """x: (N*rows, cols): row-block b -> device b; returns blocks
+        received from each device, stacked."""
+        backend = backend or self.backend or default_backend()
+        if backend == "xla_native":
+            n = self._axis_size(None)
+            xs = x.reshape(n, x.shape[0] // n, x.shape[1])
+            out = jax.lax.all_to_all(xs, self.axis, split_axis=0,
+                                     concat_axis=0, tiled=False)
+            return out.reshape(x.shape)
+        return self.compile("all_to_all", x.shape, x.dtype, algo=algo,
+                            backend=backend, opt_level=opt_level,
+                            link=link)(x)
+
+    def broadcast(self, x, root: int = 0, *,
+                  backend: Optional[str] = None,
+                  link: Optional[sel.LinkModel] = None,
+                  opt_level: Optional[int] = None):
+        """x: (rows, cols) -> root's buffer on every device."""
+        backend = backend or self.backend or default_backend()
+        if backend == "xla_native":
+            me = jax.lax.axis_index(self.axis)
+            masked = jnp.where(me == root, x, jnp.zeros_like(x))
+            return jax.lax.psum(masked, self.axis)
+        return self.compile("broadcast", x.shape, x.dtype, root=root,
+                            backend=backend, opt_level=opt_level,
+                            link=link)(x)
+
+    def tree_all_reduce(self, tree, *, backend: Optional[str] = None,
+                        lane: int = 128, **kw):
+        """Pytree bucket fusion: flatten -> one all_reduce -> unflatten
+        (see :func:`repro.core.api.tree_all_reduce`)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        if not leaves:
+            return tree
+        dtype = jnp.result_type(*leaves)
+        sizes = [leaf.size for leaf in leaves]
+        flat = jnp.concatenate(
+            [leaf.reshape(-1).astype(dtype) for leaf in leaves])
+        pad = (-flat.size) % lane
+        flat = jnp.pad(flat, (0, pad))
+        buf = flat.reshape(-1, lane)
+        red = self.all_reduce(buf, backend=backend, **kw).reshape(-1)
+        out, off = [], 0
+        for leaf, size in zip(leaves, sizes):
+            out.append(red[off:off + size].reshape(leaf.shape)
+                       .astype(leaf.dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+
+def hierarchical_all_reduce(x, *, local: Communicator, node: Communicator,
+                            backend: Optional[str] = None,
+                            small_message_bytes: int = 1 << 20,
+                            opt_level: Optional[int] = None,
+                            node_link: Optional[sel.LinkModel] = None):
+    """2PH AllReduce (paper §4.4-2PH) over two communicators:
+    RS(local) → AR(node) → AG(local).
+
+    The cross-node phase moves 1/L of the data (L = local axis size) —
+    the pod-boundary bandwidth saving that motivates the hierarchy. For
+    small messages the cross-node hop uses 1PA (the paper's first 2PH
+    variant); for large, whatever ``node``'s selector picks on
+    ``node_link`` (defaults to the node communicator's own link).
+    """
+    lnum = local._axis_size(None)
+    rows = x.shape[0]
+    nbytes = x.size * x.dtype.itemsize
+    pad = (-rows) % lnum
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+    shard = local.reduce_scatter(xp, backend=backend, opt_level=opt_level)
+    shard = node.all_reduce(
+        shard, backend=backend, link=node_link,
+        algo="allreduce_1pa" if nbytes <= small_message_bytes else None,
+        opt_level=opt_level)
+    out = local.all_gather(shard, backend=backend, opt_level=opt_level)
+    return out[:rows] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# process-default communicators (the api.py wrappers' backing store)
+# ---------------------------------------------------------------------------
+_DEFAULTS: Dict[str, Communicator] = {}
+
+
+def default_communicator(axis: str) -> Communicator:
+    """The process-default Communicator for a mesh axis (created on
+    first use; size resolved per call, so it serves any mesh carrying
+    the axis name). Install a ``TuningTable`` or fitted link on it to
+    retune the module-level ``repro.core.api`` collectives."""
+    comm = _DEFAULTS.get(axis)
+    if comm is None:
+        comm = _DEFAULTS[axis] = Communicator(axis)
+    return comm
+
+
+def reset_default_communicators() -> None:
+    """Drop all process-default communicators (tests)."""
+    _DEFAULTS.clear()

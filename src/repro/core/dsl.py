@@ -52,6 +52,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 __all__ = [
     "RANK", "PEER", "CONST", "IndexExpr",
     "Program", "Round", "Instr", "Op", "full_fanout",
+    "program_to_dict", "program_from_dict",
 ]
 
 
@@ -392,3 +393,79 @@ class Program:
             lines.append(f"  round {ri}:")
             lines += [f"    {i}" for i in r.instrs]
         return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# serialization — the MSCCL++ "execution plan file" shape: a Program is
+# plain data (instructions over a symbolic rank), so it round-trips
+# through JSON-compatible dicts. Multi-chunk optimizer forms included.
+# --------------------------------------------------------------------------
+def _expr_to_dict(e: IndexExpr) -> dict:
+    return dict(sign=e.sign, offset=e.offset, relative=e.relative,
+                scale=e.scale, post=e.post)
+
+
+def _expr_from_dict(d: dict) -> IndexExpr:
+    return IndexExpr(sign=d["sign"], offset=d["offset"],
+                     relative=d["relative"], scale=d["scale"], post=d["post"])
+
+
+def _chunk_to_dict(c: Tuple[str, IndexExpr]) -> list:
+    return [c[0], _expr_to_dict(c[1])]
+
+
+def _chunk_from_dict(c) -> Tuple[str, IndexExpr]:
+    return (c[0], _expr_from_dict(c[1]))
+
+
+def program_to_dict(p: Program) -> dict:
+    """``Program`` as a JSON-compatible dict (see ``program_from_dict``)."""
+    instrs = []
+    for ri, r in enumerate(p.rounds):
+        for i in r.instrs:
+            instrs.append(dict(
+                op=i.op.value,
+                round=ri,
+                dst=_chunk_to_dict(i.dst) if i.dst is not None else None,
+                srcs=[_chunk_to_dict(s) for s in i.srcs],
+                to=_expr_to_dict(i.to) if i.to is not None else None,
+                frm=_expr_to_dict(i.frm) if i.frm is not None else None,
+                dsts=[_chunk_to_dict(d) for d in i.dsts],
+                frms=[_expr_to_dict(f) for f in i.frms],
+                tos=[_expr_to_dict(t) for t in i.tos],
+            ))
+    return dict(name=p.name, chunks=dict(p.chunks),
+                in_buffer=p.in_buffer, out_buffer=p.out_buffer,
+                instructions=instrs)
+
+
+def program_from_dict(d: dict) -> Program:
+    """Rebuild a frozen ``Program`` from ``program_to_dict`` output,
+    preserving round structure and optimizer multi-chunk forms."""
+    p = Program.__new__(Program)
+    p.name = d["name"]
+    p.chunks = dict(d["chunks"])
+    p.in_buffer = d["in_buffer"]
+    p.out_buffer = d["out_buffer"]
+    by_round: dict = {}
+    for di in d["instructions"]:
+        instr = Instr(
+            Op(di["op"]),
+            dst=_chunk_from_dict(di["dst"]) if di["dst"] is not None else None,
+            srcs=tuple(_chunk_from_dict(s) for s in di["srcs"]),
+            to=_expr_from_dict(di["to"]) if di["to"] is not None else None,
+            frm=_expr_from_dict(di["frm"]) if di["frm"] is not None else None,
+            dsts=tuple(_chunk_from_dict(c) for c in di["dsts"]),
+            frms=tuple(_expr_from_dict(f) for f in di["frms"]),
+            tos=tuple(_expr_from_dict(t) for t in di["tos"]),
+        )
+        by_round.setdefault(di["round"], []).append(instr)
+    p.rounds = []
+    for rid in sorted(by_round):
+        r = Round()
+        for instr in by_round[rid]:
+            instr.round_id = len(p.rounds)
+            r.instrs.append(instr)
+        p.rounds.append(r)
+    p._frozen = True
+    return p

@@ -153,6 +153,15 @@ class XlaExecutor:
         self.program = program.freeze() if not program._frozen else program
         self.axis = axis
         self.vectorize = vectorize
+        self._prepared: Optional[Tuple[int, dict]] = None
+
+    def prepare(self, n: int) -> "XlaExecutor":
+        """Prebuild the lowering plan for an ``n``-rank axis — the
+        compile-once path: an ``ExecutionPlan`` calls this at plan-build
+        time so later traced executions do zero classification work."""
+        if self.vectorize:
+            self._prepared = (n, _lowering_plan(self.program, n))
+        return self
 
     # -- shared helpers ----------------------------------------------------
     def _idx(self, e: IndexExpr, me, n):
@@ -326,7 +335,12 @@ class XlaExecutor:
         n_in = p.chunks[p.in_buffer]
         rows = x.shape[0] // n_in
         cols = x.shape[1]
-        plan = _lowering_plan(p, n) if self.vectorize else None
+        if not self.vectorize:
+            plan = None
+        elif self._prepared is not None and self._prepared[0] == n:
+            plan = self._prepared[1]
+        else:
+            plan = _lowering_plan(p, n)
 
         bufs: dict[str, jax.Array] = {}
         for name, k in p.chunks.items():
@@ -381,6 +395,13 @@ class PallasExecutor:
         self.axis = axis
         self.collective_id = collective_id
         self.interpret = interpret
+        self._prepared: Optional[Tuple[int, dict]] = None
+
+    def prepare(self, n: int) -> "PallasExecutor":
+        """Prebuild the wait→put-round matching for an ``n``-rank axis
+        (the static analysis every kernel trace otherwise redoes)."""
+        self._prepared = (n, self._wait_put_rounds(n))
+        return self
 
     # -- static analysis ----------------------------------------------------
     def _wait_put_rounds(self, n: int):
@@ -430,7 +451,10 @@ class PallasExecutor:
         put_rounds = sorted({i.round_id for i in p.instructions()
                              if i.op is Op.PUT})
         round_to_pair = {r: i % _NUM_SEM_PAIRS for i, r in enumerate(put_rounds)}
-        wait_to_rounds = self._wait_put_rounds(n)
+        if self._prepared is not None and self._prepared[0] == n:
+            wait_to_rounds = self._prepared[1]
+        else:
+            wait_to_rounds = self._wait_put_rounds(n)
         wrap = len(put_rounds) > _NUM_SEM_PAIRS
 
         for ri, rnd in enumerate(p.rounds):

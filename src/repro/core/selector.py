@@ -17,7 +17,8 @@ from typing import Callable, Optional
 
 from repro.core import algorithms as algos
 
-__all__ = ["LinkModel", "ICI", "DCN", "estimate_us", "choose", "TuningTable"]
+__all__ = ["LinkModel", "ICI", "DCN", "estimate_us", "choose", "TuningTable",
+           "CANDIDATES", "fit_link_model"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,12 +40,13 @@ DCN = LinkModel(alpha_us=10.0, beta_GBps=6.25, torus=False,  # switched
                 sync_us=1.0)
 
 # Candidate algorithms per collective (paper's default library §4.4).
-_CANDIDATES = {
+CANDIDATES = {
     "all_reduce": ["allreduce_1pa", "allreduce_2pa", "allreduce_ring"],
     "all_gather": ["allpairs_ag", "ring_ag"],
     "reduce_scatter": ["allpairs_rs", "ring_rs"],
     "all_to_all": ["alltoall"],
 }
+_CANDIDATES = CANDIDATES  # back-compat alias
 
 
 def estimate_us(algo_name: str, n: int, nbytes: int,
@@ -88,14 +90,106 @@ class TuningTable:
                 return name
         return None
 
+    @classmethod
+    def from_bench(cls, bench: dict) -> "TuningTable":
+        """Build a table from a ``BENCH_collectives.json`` payload: for
+        every (collective, size) the ``opt_compare`` section measured,
+        take the measured-fastest algorithm (its optimized wall time).
+        Sizes become ``max_bytes`` brackets, so each entry covers
+        messages up to that measured point; beyond the largest bracket
+        the α-β model resumes — the deployment-tuning loop the paper's
+        production story implies (measure once, install, serve).
+
+        Brackets are stored in the units ``choose()`` is queried with:
+        the bench measures all_gather on per-shard input buffers, but
+        AG selection happens on the full gathered message, so those
+        brackets are scaled by the bench's axis size ``n``."""
+        coll_of = {a: c for c, cands in CANDIDATES.items() for a in cands}
+        n = bench.get("n", 1)
+        best: dict = {}   # (collective, nbytes) -> (wall_us, algo)
+        counts: dict = {}
+        for p in bench.get("points", []):
+            if p.get("bench") != "opt_compare":
+                continue
+            coll = coll_of.get(p.get("algo"))
+            if coll is None or "wall_us_opt" not in p:
+                continue
+            nbytes = p["nbytes"] * (n if coll == "all_gather" else 1)
+            k = (coll, nbytes)
+            counts[k] = counts.get(k, 0) + 1
+            if k not in best or p["wall_us_opt"] < best[k][0]:
+                best[k] = (p["wall_us_opt"], p["algo"])
+        # only keep brackets where >1 candidate was actually measured —
+        # a single-algo point carries no preference information
+        entries = [(c, nb, a) for (c, nb), (_, a) in sorted(best.items())
+                   if counts[(c, nb)] > 1]
+        return cls(entries=entries)
+
+
+def fit_link_model(bench: dict, base: LinkModel = ICI) -> LinkModel:
+    """Fit (α, β) from measured wall times in a ``BENCH_collectives.json``
+    payload (ROADMAP open item: replace guessed constants with fitted).
+
+    Least-squares over the single-collective points (``allreduce`` /
+    ``allgather``, xla backend): each point's optimized program gives
+    its analytic (rounds, bytes-on-wire); solve
+    ``wall_us ≈ α·rounds + bytes·(1/β)``. The sync and torus settings
+    are inherited from ``base`` (they are structural, not fitted).
+    """
+    import numpy as np
+
+    from repro.core import passes
+
+    n = bench.get("n", 8)
+    level = bench.get("opt_default", None)
+    rows, y = [], []
+    for p in bench.get("points", []):
+        if p.get("bench") not in ("allreduce", "allgather") \
+                or p.get("backend") != "xla" or "wall_us" not in p:
+            continue
+        prog = passes.optimize(algos.REGISTRY[p["algo"]](n),
+                               passes.DEFAULT_OPT_LEVEL if level is None
+                               else level, n)
+        n_in = prog.chunks[prog.in_buffer]
+        stats = prog.comm_stats(n, max(p["nbytes"] // n_in, 1))
+        bytes_key = "wire_bytes_per_rank" if base.torus else "bytes_per_rank"
+        rows.append([stats["comm_rounds"] + stats["barriers"],
+                     stats[bytes_key]])
+        y.append(p["wall_us"])
+    if len(rows) < 2:
+        raise ValueError("bench payload has too few usable points to fit")
+    sol, *_ = np.linalg.lstsq(np.asarray(rows, float),
+                              np.asarray(y, float), rcond=None)
+    alpha_us = float(sol[0])
+    inv_beta_us_per_byte = float(sol[1])
+    if alpha_us <= 0 or inv_beta_us_per_byte <= 0:
+        # a non-positive coefficient means the wall times don't behave
+        # like alpha-beta at all (anti-correlated / degenerate payload);
+        # installing a clamped fit would silently mis-rank every
+        # candidate, so refuse instead
+        raise ValueError(
+            f"degenerate alpha-beta fit (alpha={alpha_us:.4g}us, "
+            f"1/beta={inv_beta_us_per_byte:.4g}us/B); bench payload does "
+            "not follow the cost model — not installing")
+    return dataclasses.replace(base, alpha_us=alpha_us,
+                               beta_GBps=1e-3 / inv_beta_us_per_byte)
+
 
 def choose(collective: str, *, n: int, nbytes: int,
            link: LinkModel = ICI,
-           table: Optional[TuningTable] = None) -> str:
-    """Pick the fastest algorithm under the α-β model (or the table)."""
+           table: Optional[TuningTable] = None,
+           opt_level: Optional[int] = None) -> str:
+    """Pick the fastest algorithm under the α-β model (or the table).
+
+    ``opt_level`` is the pipeline level the caller will actually run at:
+    candidates are costed in that post-optimizer form (None = the
+    default pipeline level), so e.g. at ``opt_level=0`` the per-chunk
+    sync cost of the all-pairs family is charged in full.
+    """
     if table is not None:
         hit = table.lookup(collective, nbytes)
         if hit is not None:
             return hit
-    cands = _CANDIDATES[collective]
-    return min(cands, key=lambda a: estimate_us(a, n, nbytes, link))
+    cands = CANDIDATES[collective]
+    return min(cands, key=lambda a: estimate_us(a, n, nbytes, link,
+                                                opt_level=opt_level))

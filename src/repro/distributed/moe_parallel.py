@@ -21,21 +21,27 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import api as coll_api
+from repro.core import comm as comm_lib
 from repro import compat
 
 __all__ = ["moe_layer_ep"]
 
 
 def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 comm: Optional[comm_lib.Communicator] = None):
     """Sparse expert-parallel MoE. Call INSIDE shard_map with the expert
     weights sharded on ``axis`` (leading expert dim) and ``x`` the local
     token shard (b, s, d).
 
     p["w_gate"|"w_up"|"w_down"]: (e_local, d, f) / (e_local, f, d);
     p["router"]: (d, e_total) replicated.
+
+    ``comm``: the Communicator carrying the expert axis's all_to_all
+    plans (compiled once, replayed every layer/step); defaults to the
+    process-default communicator for ``axis``.
     """
+    comm = comm if comm is not None else comm_lib.default_communicator(axis)
     b, s, d = x.shape
     ep = compat.axis_size(axis)
     e_total = p["router"].shape[-1]
@@ -67,8 +73,8 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     dispatch = dispatch.at[slot].set(tokens[flat_tok[order]])[:-1]
 
     # ---- all_to_all: expert-major blocks -> owning devices -------------
-    recv = coll_api.all_to_all(
-        dispatch.reshape(e_total * capacity, d), axis, backend=backend)
+    recv = comm.all_to_all(
+        dispatch.reshape(e_total * capacity, d), backend=backend)
     # recv: for my e_local experts, ep blocks of (e_local·capacity) rows
     recv = recv.reshape(ep, e_local, capacity, d)
 
@@ -79,8 +85,8 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     out = jnp.einsum("necf,efd->necd", act, p["w_down"])
 
     # ---- combine: inverse all_to_all + weighted scatter-add -------------
-    back = coll_api.all_to_all(
-        out.reshape(ep * e_local * capacity, d), axis, backend=backend)
+    back = comm.all_to_all(
+        out.reshape(ep * e_local * capacity, d), backend=backend)
     back = back.reshape(e_total * capacity, d)
     back = jnp.concatenate([back, jnp.zeros((1, d), x.dtype)], axis=0)
     gathered = back[slot]                                    # (T·k, d)

@@ -23,13 +23,15 @@ import numpy as np
 from repro.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import api as coll_api
+from repro.core import comm as comm_lib
+from repro.core import selector as sel
 from repro.distributed import sharding as shd
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.train import optimizer as opt
 
-__all__ = ["make_train_step", "make_serve_step", "init_sharded"]
+__all__ = ["make_train_step", "make_serve_step", "init_sharded",
+           "make_dp_communicators"]
 
 
 def _dp_axes(mesh: Mesh, ax: shd.MeshAxes) -> tuple[str, ...]:
@@ -62,6 +64,25 @@ def _pspecs(cfg, mesh, ax, fsdp: bool):
     return pspecs
 
 
+def make_dp_communicators(mesh: Mesh, ax: shd.MeshAxes) -> dict:
+    """Init-once Communicators for the DP gradient-reduction axes
+    (paper §5.2 deployment shape: plan at setup, replay every step).
+
+    Two DP axes -> {'node', 'local'} for the hierarchical 2PH path
+    (node hops costed on DCN); one -> {'flat'}; zero -> {}.
+    """
+    dp = _dp_axes(mesh, ax)
+    if len(dp) == 2:
+        return {
+            "node": comm_lib.Communicator(
+                dp[0], n=mesh.shape[dp[0]], link=sel.DCN),
+            "local": comm_lib.Communicator(dp[1], n=mesh.shape[dp[1]]),
+        }
+    if len(dp) == 1:
+        return {"flat": comm_lib.Communicator(dp[0], n=mesh.shape[dp[0]])}
+    return {}
+
+
 def make_train_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
                     opt_cfg: opt.AdamWConfig, *, mode: str = "auto",
                     global_batch: int, seq_len: int,
@@ -69,9 +90,16 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
                     dp_backend: str = "xla",
                     dp_wire_dtype=None,
                     fsdp: bool = False,
-                    donate: bool = True):
+                    donate: bool = True,
+                    dp_comms: Optional[dict] = None):
     """Returns jit'd ``step(params, opt_state, batch) -> (params,
-    opt_state, metrics)`` with shardings bound to ``mesh``."""
+    opt_state, metrics)`` with shardings bound to ``mesh``.
+
+    ``dp_comms``: explicit Communicators for the DP axes (see
+    ``make_dp_communicators``) — the compile-once/execute-many planning
+    objects the ``explicit`` mode reduces gradients through. Built
+    automatically when omitted; pass your own to install tuning tables
+    or inspect plan caches from the driver."""
     pspecs = _pspecs(cfg, mesh, ax, fsdp)
     psh = shd.shardings_for(pspecs, mesh)
     ospec = {"mu": pspecs, "nu": pspecs, "count": P()}
@@ -108,8 +136,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
         # MANUAL over the dp axes (model stays auto/GSPMD for TP), then
         # reduced by OUR collectives: 2PH hierarchical across (pod, data)
         # — intra-pod RS, cross-pod AR on 1/L shards, intra-pod AG — the
-        # paper's algorithm on the trainer's critical path.
+        # paper's algorithm on the trainer's critical path. The
+        # Communicators (and their plan caches) are built HERE, once per
+        # step function; tracing replays cached ExecutionPlans.
         ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        comms = dp_comms if dp_comms is not None \
+            else make_dp_communicators(mesh, ax)
 
         def reduce_leaf(leaf):
             x2 = leaf.reshape(-1, leaf.shape[-1]) if leaf.ndim >= 2 \
@@ -119,11 +151,11 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
                 # int8+error-feedback variant; bf16 halves DP bytes)
                 x2 = x2.astype(dp_wire_dtype)
             if len(dp) == 2:
-                red = coll_api.hierarchical_all_reduce(
-                    x2, local_axis=dp[1], node_axis=dp[0],
+                red = comm_lib.hierarchical_all_reduce(
+                    x2, local=comms["local"], node=comms["node"],
                     backend=dp_backend)
             elif len(dp) == 1:
-                red = coll_api.all_reduce(x2, dp[0], backend=dp_backend)
+                red = comms["flat"].all_reduce(x2, backend=dp_backend)
             else:
                 red = x2
             return (red / ndp).reshape(leaf.shape).astype(leaf.dtype)

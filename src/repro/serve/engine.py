@@ -5,6 +5,16 @@ decode step is dominated by the per-layer TP AllReduce, which is where
 the MSCCL++ collectives plug in; prefill is compute-bound so the gain
 concentrates in decode — the asymmetry Figure 10 reports.
 
+Deployment shape (§5.2): the engine owns a :class:`Communicator` for
+the TP axis and compiles the decode-step collective plans at __init__
+— the per-layer hidden-state AllReduce shape every generated token
+implies. ``plan_report()`` exposes their cost cards (per-token
+predicted comm µs) before a single request is served. NOTE: today's
+jitted decode step partitions via GSPMD (auto mode), so these plans
+are the *planning/inspection* artifact — the communicator and its
+cache are in place for the explicit-TP decode step (ROADMAP open
+item), which will replay them on the hot path.
+
 The engine supports continuous-batching-lite: a fixed slot count,
 per-slot position counters, and slot recycling when a sequence emits
 EOS.
@@ -18,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import comm as comm_lib
 from repro.distributed import sharding as shd
 from repro.distributed.step import make_serve_step
 from repro.models import transformer as tf
@@ -36,7 +47,8 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, mesh, serve_cfg: ServeConfig,
-                 ax: shd.MeshAxes = shd.MeshAxes()):
+                 ax: shd.MeshAxes = shd.MeshAxes(),
+                 comm: Optional[comm_lib.Communicator] = None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -44,9 +56,42 @@ class Engine:
         self.step_fn, _ = make_serve_step(
             cfg, mesh, ax, batch=serve_cfg.batch, max_kv=serve_cfg.max_kv,
             donate=True)
+        # -- compile-once planning (§5.2): TP communicator + decode plans
+        # (cost/inspection artifacts until the explicit-TP decode step
+        # lands — see module docstring)
+        tp = int(mesh.shape.get(ax.model, 1))
+        self.comm = comm if comm is not None else comm_lib.Communicator(
+            ax.model, n=tp, backend=comm_lib.default_backend())
+        self.decode_plans: dict = {}
+        if tp > 1:
+            # the per-layer decode AllReduce: one token's hidden state
+            # per slot, summed over the TP axis after the sharded FFN/
+            # attention matmuls — identical shape every layer and every
+            # step, so ONE plan covers the whole decode path.
+            self.decode_plans["layer_allreduce"] = self.comm.compile(
+                "all_reduce", (serve_cfg.batch, cfg.d_model), cfg.dtype)
+            # logits gather: each TP shard holds vocab/tp columns
+            if cfg.vocab % tp == 0:
+                self.decode_plans["logits_allgather"] = self.comm.compile(
+                    "all_gather", (serve_cfg.batch, cfg.vocab // tp),
+                    cfg.dtype)
         self.cache = tf.init_cache(cfg, serve_cfg.batch, serve_cfg.max_kv)
         self.pos = 0
         self.active = np.zeros(serve_cfg.batch, bool)
+
+    def plan_report(self) -> dict:
+        """Cost cards of the decode-step plans plus the per-token
+        predicted communication time (n_layers × layer AllReduce +
+        final logits gather)."""
+        cards = {k: p.cost_card() for k, p in self.decode_plans.items()}
+        per_tok = 0.0
+        if "layer_allreduce" in self.decode_plans:
+            per_tok += (self.cfg.n_layers
+                        * self.decode_plans["layer_allreduce"].estimate_us)
+        if "logits_allgather" in self.decode_plans:
+            per_tok += self.decode_plans["logits_allgather"].estimate_us
+        return dict(plans=cards, predicted_comm_us_per_token=round(per_tok, 2),
+                    communicator=repr(self.comm))
 
     # -- prefill: feed prompts token-by-token through the decode path ------
     # (correct and simple; the fused full-sequence prefill kernel is the

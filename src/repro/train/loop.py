@@ -27,7 +27,8 @@ import jax
 import numpy as np
 
 from repro.distributed import sharding as shd
-from repro.distributed.step import init_sharded, make_train_step
+from repro.distributed.step import (init_sharded, make_dp_communicators,
+                                    make_train_step)
 from repro.models.config import ModelConfig
 from repro.train import checkpoint as ckpt
 from repro.train import data as data_lib
@@ -46,6 +47,7 @@ class TrainConfig:
     keep_n: int = 3
     log_every: int = 10
     mode: str = "auto"                 # 'auto' | 'explicit'
+    dp_backend: str = "xla"            # explicit-mode collective backend
     straggler_factor: float = 3.0
     seed: int = 0
     remat_policy: str = "none"
@@ -59,10 +61,17 @@ def run(cfg: ModelConfig, mesh, train_cfg: TrainConfig,
     opt_cfg = opt_cfg or opt.AdamWConfig(
         total_steps=train_cfg.steps,
         warmup_steps=max(1, train_cfg.steps // 10))
+    # the driver owns the planning objects (paper §4.4/§5.2: set up a
+    # communicator once, compile plans, replay them every step); their
+    # plan-cache stats come back in the result dict for observability
+    dp_comms = make_dp_communicators(mesh, ax) \
+        if train_cfg.mode == "explicit" else {}
     step_fn, _ = make_train_step(
         cfg, mesh, ax, opt_cfg, mode=train_cfg.mode,
         global_batch=train_cfg.global_batch, seq_len=train_cfg.seq_len,
-        remat_policy=train_cfg.remat_policy)
+        remat_policy=train_cfg.remat_policy,
+        dp_backend=train_cfg.dp_backend,
+        dp_comms=dp_comms or None)
 
     pipeline = data_lib.make_pipeline(data_lib.DataConfig(
         vocab=cfg.vocab, batch=train_cfg.global_batch,
@@ -116,4 +125,6 @@ def run(cfg: ModelConfig, mesh, train_cfg: TrainConfig,
                   keep_n=train_cfg.keep_n)
     return dict(losses=losses, params=params, opt_state=opt_state,
                 stragglers=stragglers,
-                mean_step_s=float(np.mean(durs[1:])) if len(durs) > 1 else None)
+                mean_step_s=float(np.mean(durs[1:])) if len(durs) > 1 else None,
+                plan_stats={name: dict(c.stats, plans=len(c.plans()))
+                            for name, c in dp_comms.items()})

@@ -11,6 +11,23 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+# hypothesis is absent from the minimal CI image; install the vendored
+# shim (tests/_hypothesis_shim.py) so the property tests run instead of
+# skipping. A real hypothesis install always takes precedence.
+try:  # noqa: SIM105
+    import hypothesis  # noqa: F401
+except ImportError:
+    import importlib.util as _ilu
+    import pathlib as _pathlib
+    import sys as _sys
+
+    _spec = _ilu.spec_from_file_location(
+        "hypothesis", _pathlib.Path(__file__).parent / "_hypothesis_shim.py")
+    _shim = _ilu.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    _sys.modules["hypothesis"] = _shim
+    _sys.modules["hypothesis.strategies"] = _shim.strategies
+
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
