@@ -11,8 +11,19 @@ that ratio structurally via the removed sync rounds), and combine with
 the roofline compute+memory time of the decode step per batch config.
 
 Output mirrors Fig. 10's bsz/seqlen grid with predicted decode speedup.
+
+``decode_auto_vs_explicit`` complements the analytic grid with a REAL
+(CPU-emulated) measurement: the same tiny model decoded through the
+auto (GSPMD psum) step and the explicit plan-replay step
+(``make_serve_step(mode="explicit")``), wall-clocked per token and
+checked for bit-identical greedy output. Emitted into
+``BENCH_collectives.json`` by ``run.py --json``; CPU wall time is
+structure only, not TPU time. ``explicit_decode_smoke`` is the
+2-device variant ``scripts/check.sh --smoke`` runs per PR.
 """
 from __future__ import annotations
+
+import time
 
 from repro import configs
 from repro.core import selector as sel
@@ -52,6 +63,101 @@ def decode_compute_us(cfg, batch: int, seqlen: int) -> float:
     return max(mem_s, comp_s) * 1e6
 
 
+def _bench_cfg():
+    from repro.models.config import ModelConfig
+
+    return ModelConfig(
+        name="decode-bench", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=512, max_seq=256, dtype="float32")
+
+
+def _run_engine(cfg, params, mesh, mode, *, batch, prompts, tokens):
+    from repro.serve.engine import Engine, ServeConfig
+
+    eng = Engine(cfg, params, mesh,
+                 ServeConfig(batch=batch, max_kv=128, mode=mode))
+    assert eng.mode == mode, f"requested {mode!r}, engine fell back"
+    logits = eng.prefill(prompts)
+    compiles0 = eng.comm.stats["compiles"]
+    t0 = time.perf_counter()
+    toks = eng.decode(logits, num_tokens=tokens)
+    dt = time.perf_counter() - t0
+    assert eng.comm.stats["compiles"] == compiles0, \
+        "decode recompiled plans instead of replaying"
+    return toks, dt / tokens * 1e3, eng
+
+
+def decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
+                            dp=2, tp=4) -> dict:
+    """Measured auto (GSPMD psum) vs explicit (compiled-plan replay)
+    decode on the same params: ms/token both ways + bit-equality of the
+    greedy output. The §5.2 comparison the ROADMAP asks to record."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.distributed import sharding as shd
+    from repro.distributed.step import init_sharded
+
+    cfg = _bench_cfg()
+    mesh = Mesh(np.asarray(jax.devices()[: dp * tp]).reshape(dp, tp),
+                ("data", "model"))
+    params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (batch, 4)).astype(np.int32)
+
+    toks_a, ms_a, _ = _run_engine(cfg, params, mesh, "auto",
+                                  batch=batch, prompts=prompts, tokens=tokens)
+    toks_e, ms_e, eng = _run_engine(cfg, params, mesh, "explicit",
+                                    batch=batch, prompts=prompts,
+                                    tokens=tokens)
+    point = dict(
+        bench="decode_auto_explicit", model=cfg.name, dp=dp, tp=tp,
+        batch=batch, tokens=tokens, n_layers=cfg.n_layers,
+        backend=eng.comm.backend or "xla",
+        wall_ms_per_token_auto=round(ms_a, 2),
+        wall_ms_per_token_explicit=round(ms_e, 2),
+        speedup_explicit=round(ms_a / ms_e, 3),
+        tokens_bit_identical=bool((toks_a == toks_e).all()),
+        predicted_comm_us_per_token=eng.plan_report()[
+            "predicted_comm_us_per_token"],
+    )
+    if points is not None:
+        points.append(point)
+    return point
+
+
+def explicit_decode_smoke(tokens=4) -> dict:
+    """Seconds-fast 2-device explicit-decode smoke
+    (``scripts/check.sh --smoke``): TP=2 model-only mesh, asserts the
+    explicit step generates, replays (compile counters flat), and
+    matches the auto path's greedy tokens bit-for-bit."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.distributed import sharding as shd
+    from repro.distributed.step import init_sharded
+
+    cfg = _bench_cfg()
+    mesh = Mesh(np.asarray(jax.devices()[:2]), ("model",))
+    params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
+    prompts = np.random.RandomState(1).randint(
+        0, cfg.vocab, (2, 3)).astype(np.int32)
+    toks_a, _, _ = _run_engine(cfg, params, mesh, "auto",
+                               batch=2, prompts=prompts, tokens=tokens)
+    toks_e, ms_e, eng = _run_engine(cfg, params, mesh, "explicit",
+                                    batch=2, prompts=prompts, tokens=tokens)
+    assert (toks_a == toks_e).all(), "explicit decode diverged from auto"
+    rep = eng.plan_report()
+    return dict(tp=2, tokens=tokens, ms_per_token=round(ms_e, 2),
+                tokens_bit_identical=True,
+                predicted_comm_us_per_token=rep[
+                    "predicted_comm_us_per_token"],
+                hits=rep["plans"]["layer_allreduce"]["hits"])
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     cfg = configs.get_config("llama2-70b")
@@ -79,4 +185,13 @@ def main(rows=None):
         rows.append(("prefill_llama2_70b", f"bsz{bsz}_seq{seqlen}",
                      round(comp + nccl, 1), round(comp + ours, 1),
                      f"{speedup:.3f}x", ""))
+    # measured (CPU-emulated) auto-vs-explicit decode on the real engine
+    p = decode_auto_vs_explicit()
+    rows.append(("decode_auto_vs_explicit",
+                 f"dp{p['dp']}_tp{p['tp']}_bsz{p['batch']}",
+                 p["wall_ms_per_token_auto"],
+                 p["wall_ms_per_token_explicit"],
+                 f"{p['speedup_explicit']}x",
+                 "bit-identical" if p["tokens_bit_identical"]
+                 else "MISMATCH"))
     return rows

@@ -38,7 +38,7 @@ if str(_ROOT) not in sys.path:
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if "--smoke" in argv:
-        from benchmarks import collectives
+        from benchmarks import collectives, llm_inference
 
         payload = collectives.plan_smoke()
         for p in payload["points"]:
@@ -47,18 +47,28 @@ def main(argv=None) -> None:
                   f"pred={p['predicted_us']}us")
         print(f"plan cache: {payload['compiles']} compiles, "
               f"{payload['hits']} hits — compile-once OK")
+        dec = llm_inference.explicit_decode_smoke()
+        print(f"explicit_decode_smoke tp={dec['tp']} "
+              f"{dec['ms_per_token']}ms/token "
+              f"pred_comm={dec['predicted_comm_us_per_token']}us/token "
+              f"bucket_hits={dec['hits']} — bit-identical to auto OK")
         return
     if "--json" in argv:
-        from benchmarks import collectives
+        from benchmarks import collectives, llm_inference
 
         payload = collectives.json_payload()
+        # §5.2 hot path: measured auto-vs-explicit decode comparison
+        llm_inference.decode_auto_vs_explicit(payload["points"])
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
         out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
         geo = payload["geomean_speedup_allpairs"]
+        dec = [p for p in payload["points"]
+               if p["bench"] == "decode_auto_explicit"][0]
         print(f"wrote {out} ({len(payload['points'])} points, "
               f"allpairs O0->O{payload['opt_default']} geomean "
-              f"speedup {geo}x)")
+              f"speedup {geo}x, decode auto->explicit "
+              f"{dec['speedup_explicit']}x)")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

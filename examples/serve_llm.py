@@ -2,7 +2,17 @@
 a sharded KV cache — the paper's §5.2 deployment shape (vLLM + TP),
 with the decode-path AllReduce running over this library's stack.
 
+With ``--mode explicit`` (the default) the jitted decode step is the
+explicit-TP hot path: a shard_map manual over the model axis whose two
+per-layer AllReduces (attention out-proj, MLP down-proj) REPLAY the
+engine's init-compiled ExecutionPlans — greedy output is bit-identical
+to ``--mode auto`` (GSPMD psum), which this script verifies when both
+modes are run. Decode plans are compiled per active-slot BUCKET
+(compile once per bucket, pad at dispatch), and the per-bucket cost
+cards + dispatch hit counts are printed after generation.
+
     python examples/serve_llm.py --tokens 32
+    python examples/serve_llm.py --mode auto --tokens 32
 """
 import os
 
@@ -25,6 +35,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--mode", choices=("auto", "explicit"),
+                    default="explicit")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -36,17 +48,20 @@ def main():
     params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
 
     eng = Engine(cfg, params, mesh,
-                 ServeConfig(batch=args.batch, max_kv=256, temperature=0.8))
-    # decode-step plans were compiled at engine init (§5.2: plan once)
-    # — inspect algorithm choice and predicted comm cost before serving
-    # a single request (the GSPMD decode path makes these cost cards,
-    # not the executed kernels, for now — see ROADMAP)
+                 ServeConfig(batch=args.batch, max_kv=256, temperature=0.8,
+                             mode=args.mode))
+    # decode-step plans were compiled at engine init (§5.2: plan once),
+    # one per active-slot bucket — inspect algorithm choice and predicted
+    # comm cost before serving a single request. In explicit mode these
+    # ARE the kernels every generated token replays.
     report = eng.plan_report()
-    for name, card in report["plans"].items():
-        print(f"plan[{name}]: {card['algo']} O{card['opt_level']} "
-              f"est={card['estimate_us']}us")
+    print(f"mode={eng.mode}")
+    for name, fam in report["plans"].items():
+        for b, card in fam["cards"].items():
+            print(f"plan[{name}][bucket={b}]: {card['algo']} "
+                  f"O{card['opt_level']} est={card['estimate_us']}us")
     print(f"predicted comm/token: {report['predicted_comm_us_per_token']}us "
-          f"({cfg.n_layers} layers)")
+          f"({cfg.n_layers} layers x 2 AllReduce + logits gather)")
     prompts = np.random.RandomState(0).randint(
         0, cfg.vocab, (args.batch, 12)).astype(np.int32)
 
@@ -54,13 +69,20 @@ def main():
     logits = eng.prefill(prompts)
     t_prefill = time.perf_counter() - t0
 
+    compiles_before = eng.comm.stats["compiles"]
     t0 = time.perf_counter()
     out = eng.decode(logits, num_tokens=args.tokens, seed=1)
     t_decode = time.perf_counter() - t0
+    assert eng.comm.stats["compiles"] == compiles_before  # pure replay
 
     per_tok = t_decode / args.tokens * 1e3
     print(f"prefill: {t_prefill*1e3:.1f} ms for {prompts.shape[1]} tokens")
     print(f"decode:  {per_tok:.2f} ms/token  ({args.batch} sequences)")
+    # bucketed dispatch counters: which plan sizes the served traffic hit
+    report = eng.plan_report()
+    for name, fam in report["plans"].items():
+        print(f"bucket hits[{name}]: {fam['hits']}")
+    print(f"plan cache: {eng.comm.stats} (compiles flat across decode)")
     print(f"sample continuation (seq 0): {out[0][:16].tolist()}")
 
 

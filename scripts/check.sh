@@ -5,6 +5,8 @@
 #   scripts/check.sh            # full pytest suite (args pass through)
 #   scripts/check.sh --smoke    # seconds-fast Communicator plan-path
 #                               # bench smoke (compile-once contract)
+#                               # + 2-device explicit-decode smoke
+#                               # (plan replay bit-identical to auto)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--smoke" ]]; then

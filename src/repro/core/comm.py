@@ -45,7 +45,7 @@ from repro.core.dsl import Program, program_from_dict, program_to_dict
 from repro.core.executor import PallasExecutor, XlaExecutor
 
 __all__ = [
-    "Communicator", "ExecutionPlan", "default_communicator",
+    "Communicator", "ExecutionPlan", "BucketedPlan", "default_communicator",
     "default_backend", "reset_default_communicators",
     "hierarchical_all_reduce", "PLAN_FORMAT_VERSION",
 ]
@@ -62,6 +62,13 @@ _COLLECTIVE_IDS = {  # stable barrier-semaphore ids per collective type
 #: embed the chunk grid in their output layout and instead fall back to
 #: an un-split pipeline level (and reject non-divisible rows outright).
 _PADDABLE = frozenset({"all_reduce", "broadcast"})
+
+#: collectives ``plan_for(..., buckets=)`` can pad at dispatch: the
+#: padding rows either cancel (all_reduce/broadcast: zero rows stay
+#: zero) or land in a sliceable per-rank block (all_gather's tiled
+#: output). reduce_scatter / all_to_all redistribute rows across ranks,
+#: so bucket padding would corrupt the block layout.
+_BUCKETABLE = frozenset({"all_reduce", "broadcast", "all_gather"})
 
 
 def default_backend() -> str:
@@ -195,6 +202,76 @@ class ExecutionPlan:
             program=program, executor=executor)
 
 
+@dataclasses.dataclass(eq=False, repr=False)
+class BucketedPlan:
+    """A family of :class:`ExecutionPlan` s over row-count buckets —
+    compile per bucket, pad at dispatch.
+
+    The continuous-batching shape problem (ROADMAP): a serving stack
+    whose active-slot count varies would otherwise compile one plan per
+    distinct row count. ``plan_for(shape, buckets=...)`` compiles ONE
+    plan per bucket size; ``__call__`` routes a payload to the smallest
+    bucket that fits, zero-pads the missing rows, replays that bucket's
+    plan, and slices the result back — so any slot count in range
+    replays one of a handful of frozen plans. ``hits`` counts dispatches
+    per bucket (incremented at trace time: one count per traced step,
+    the compile-side analogue of the plan cache's hit counter).
+    """
+
+    collective: str
+    axis: str
+    n: int
+    cols: int
+    dtype: str
+    buckets: Tuple[int, ...]             # ascending row counts
+    plans: Dict[int, ExecutionPlan]      # bucket rows -> plan
+    hits: Dict[int, int]
+
+    # -- dispatch ----------------------------------------------------------
+    def bucket_for(self, rows: int) -> int:
+        """Smallest bucket that fits ``rows``."""
+        for b in self.buckets:
+            if rows <= b:
+                return b
+        raise ValueError(
+            f"rows={rows} exceeds the largest bucket {self.buckets[-1]} "
+            f"of {self!r}")
+
+    def plan_for_rows(self, rows: int) -> ExecutionPlan:
+        return self.plans[self.bucket_for(rows)]
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Execute on a local shard inside shard_map: pad to the bucket,
+        replay its plan, slice back to the caller's rows."""
+        rows = int(x.shape[0])
+        b = self.bucket_for(rows)
+        self.hits[b] += 1
+        plan = self.plans[b]
+        if rows == b:
+            return plan(x)
+        out = plan(jnp.pad(x, ((0, b - rows), (0, 0))))
+        if self.collective == "all_gather":
+            # tiled output: slice the padding out of every rank's block
+            return out.reshape(self.n, b, -1)[:, :rows].reshape(
+                self.n * rows, out.shape[1])
+        return out[:rows]
+
+    # -- inspection --------------------------------------------------------
+    def cost_cards(self) -> Dict[int, dict]:
+        """Per-bucket cost cards (bucket rows -> card)."""
+        return {b: self.plans[b].cost_card() for b in self.buckets}
+
+    def report(self) -> dict:
+        """Cost cards + dispatch hit counts — the serving-side view."""
+        return dict(collective=self.collective, buckets=list(self.buckets),
+                    cards=self.cost_cards(), hits=dict(self.hits))
+
+    def __repr__(self):
+        return (f"BucketedPlan({self.collective} n={self.n} "
+                f"cols={self.cols} dtype={self.dtype} "
+                f"buckets={list(self.buckets)} hits={dict(self.hits)})")
+
+
 class Communicator:
     """Init-once planning object for one mesh axis (see module docstring).
 
@@ -217,6 +294,7 @@ class Communicator:
         self.backend = backend
         self.opt_level = opt_level
         self._plans: Dict[tuple, ExecutionPlan] = {}
+        self._bucketed: Dict[tuple, BucketedPlan] = {}
         self.stats = {"compiles": 0, "hits": 0}
 
     # -- configuration -----------------------------------------------------
@@ -225,6 +303,7 @@ class Communicator:
         plan cache: cached algorithm choices may no longer apply."""
         self.table = table
         self._plans.clear()
+        self._bucketed.clear()
 
     def load_bench_tuning(self, payload, *, fit_link: bool = True) -> None:
         """Install measured tuning from a ``BENCH_collectives.json``
@@ -278,6 +357,66 @@ class Communicator:
         self._plans[key] = plan
         self.stats["compiles"] += 1
         return plan
+
+    def plan_for(self, collective: str, shape, dtype, *,
+                 buckets=None, algo: Optional[str] = None,
+                 backend: Optional[str] = None,
+                 opt_level: Optional[int] = None, root: int = 0,
+                 link: Optional[sel.LinkModel] = None,
+                 n: Optional[int] = None):
+        """Bucketed compilation (ROADMAP: continuous batching across
+        bucket sizes). With ``buckets=None`` this is :meth:`compile`.
+        With ``buckets=(b1, b2, ...)`` (row counts) it compiles one
+        plan per bucket — through the ordinary plan cache, so a later
+        ``plan_for``/``compile`` with an overlapping bucket hits — and
+        returns a :class:`BucketedPlan` that pads at dispatch. The
+        bucketed artifact itself is cached, so engine init and step
+        construction share one hit-counter view.
+        """
+        if buckets is None:
+            return self.compile(collective, shape, dtype, algo=algo,
+                                backend=backend, opt_level=opt_level,
+                                root=root, link=link, n=n)
+        if collective not in _BUCKETABLE:
+            raise ValueError(
+                f"bucketed compilation supports {sorted(_BUCKETABLE)}, "
+                f"not {collective!r} (its output layout embeds the row "
+                f"distribution, so bucket padding would corrupt it)")
+        rows, cols = int(shape[0]), int(shape[1])
+        bs = tuple(sorted({int(b) for b in buckets}))
+        if not bs or bs[0] <= 0:
+            raise ValueError(f"buckets must be positive row counts: {buckets}")
+        if rows > bs[-1]:
+            raise ValueError(
+                f"shape rows={rows} exceed the largest bucket {bs[-1]}")
+        backend_r = backend or self.backend or default_backend()
+        nn = self._axis_size(n)
+        dtype_name = np.dtype(dtype).name
+        level_req = self.opt_level if opt_level is None else opt_level
+        level_req = passes.DEFAULT_OPT_LEVEL if level_req is None else level_req
+        key = (collective, bs, cols, dtype_name, nn, backend_r, algo,
+               level_req, link or self.link,
+               root if collective == "broadcast" else None)
+        cached = self._bucketed.get(key)
+        if cached is not None:
+            self.stats["hits"] += 1
+            return cached
+        plans = {
+            b: self.compile(collective, (b, cols), dtype, algo=algo,
+                            backend=backend, opt_level=opt_level, root=root,
+                            link=link, n=nn)
+            for b in bs
+        }
+        bucketed = BucketedPlan(
+            collective=collective, axis=self.axis, n=nn, cols=cols,
+            dtype=dtype_name, buckets=bs, plans=plans,
+            hits={b: 0 for b in bs})
+        self._bucketed[key] = bucketed
+        return bucketed
+
+    def bucketed_plans(self) -> Dict[tuple, BucketedPlan]:
+        """A snapshot of the bucketed-plan cache (key -> plan family)."""
+        return dict(self._bucketed)
 
     def _build(self, collective, rows, cols, dtype, n, backend, algo,
                level_req, root, link) -> ExecutionPlan:

@@ -382,11 +382,22 @@ class PallasExecutor:
     """Trace a Program into a Pallas TPU kernel over channel primitives.
 
     Understands the optimizer's multi-chunk forms: a coalesced put
-    issues its k DMAs consecutively on the round's semaphore pair; a
-    batched wait performs its k recv-waits at one program point (the
-    byte-credit accounting stays per-descriptor — DMA semaphores count
-    bytes — but the *program* now synchronizes once per round, so
-    fewer put rounds means fewer semaphore pairs and barrier wraps).
+    issues its DMAs consecutively on the round's semaphore pair; a
+    batched wait performs its recv-waits at one program point. When a
+    coalesced group's k chunks address one *contiguous slab* of a split
+    buffer (the chunk-split pass's ``k*base + j`` layout, detected with
+    the same ``_slab`` test the XLA lowering uses), the whole group
+    moves as ONE multi-chunk DMA descriptor per peer — a strided copy —
+    instead of k per-chunk descriptors, and the matching batched wait
+    waits on the slab with one matching descriptor (DMA semaphores
+    count bytes, so descriptor granularity must agree on both sides).
+    This closes the ROADMAP item "coalesced puts still issue k
+    descriptors".
+
+    ``descriptor_count(n)`` reports the per-rank DMA put descriptors one
+    kernel invocation issues; ``last_trace_descriptors`` is the count
+    actually issued by the most recent kernel trace (tests assert the
+    two agree).
     """
 
     def __init__(self, program: Program, axis: str, *, collective_id: int = 7,
@@ -395,13 +406,92 @@ class PallasExecutor:
         self.axis = axis
         self.collective_id = collective_id
         self.interpret = interpret
-        self._prepared: Optional[Tuple[int, dict]] = None
+        self._prepared: Optional[Tuple[int, dict, dict, dict]] = None
+        #: DMA put descriptors issued by the most recent kernel trace
+        self.last_trace_descriptors: int = 0
 
     def prepare(self, n: int) -> "PallasExecutor":
-        """Prebuild the wait→put-round matching for an ``n``-rank axis
-        (the static analysis every kernel trace otherwise redoes)."""
-        self._prepared = (n, self._wait_put_rounds(n))
+        """Prebuild the wait→put-round matching and the per-instruction
+        slab/descriptor plans — put AND wait side — for an ``n``-rank
+        axis (the static analysis every kernel trace otherwise redoes)."""
+        wait_rounds = self._wait_put_rounds(n)
+        self._prepared = (n, wait_rounds, self._put_plan(n),
+                          self._wait_plan(n, wait_rounds))
         return self
+
+    # -- slab/descriptor planning -------------------------------------------
+    def _put_emissions(self, instr, n: int):
+        """The DMA descriptors one PUT instruction issues, grouped by
+        shift: ``(shift, triples, slab)`` where ``slab`` is
+        ``(sb, db, src_base, dst_base, k)`` when the group's k chunks
+        move as one contiguous-slab descriptor, else None."""
+        out = []
+        for shift, triples in _group_by_shift(instr.put_triples(), n):
+            slab = None
+            if len(triples) > 1:
+                sb0 = triples[0][0][0]
+                db0 = triples[0][1][0]
+                if all(sb == sb0 for (sb, _), _, _ in triples) \
+                        and all(db == db0 for _, (db, _), _ in triples):
+                    s_base = _slab([si for (_, si), _, _ in triples])
+                    d_base = _slab([di for _, (_, di), _ in triples])
+                    if s_base is not None and d_base is not None:
+                        slab = (sb0, db0, s_base, d_base, len(triples))
+            out.append((shift, tuple(triples), slab))
+        return out
+
+    def _put_plan(self, n: int) -> dict:
+        return {id(i): self._put_emissions(i, n)
+                for i in self.program.instructions() if i.op is Op.PUT}
+
+    def _wait_emissions(self, instr, n: int, rounds):
+        """The recv-wait descriptors for one WAIT: consecutive chunks of
+        one buffer matching one put round collapse into a slab wait when
+        their indices form a contiguous slab (mirroring the sender's
+        slab descriptor, so byte credits match one-to-one)."""
+        chunks = instr.wait_chunks()
+        out = []
+        i = 0
+        while i < len(chunks):
+            (db, _), _ = chunks[i]
+            rid = rounds[i]
+            j = i + 1
+            while j < len(chunks) and rounds[j] == rid \
+                    and chunks[j][0][0] == db:
+                j += 1
+            run = chunks[i:j]
+            base = _slab([e for (_, e), _ in run]) if len(run) > 1 else None
+            if base is not None:
+                out.append((rid, db, base, len(run)))
+            else:
+                for (b, e), _ in run:
+                    out.append((rid, b, e, 1))
+            i = j
+        return out
+
+    def _wait_plan(self, n: int, wait_rounds: dict) -> dict:
+        return {id(w): self._wait_emissions(w, n, wait_rounds[id(w)])
+                for w in self.program.instructions() if w.op is Op.WAIT}
+
+    def descriptor_count(self, n: int) -> int:
+        """Per-rank DMA put descriptors one invocation issues — the
+        quantity the slab lowering minimizes (a coalesced k-chunk slab
+        put counts 1, not k)."""
+        if self._prepared is not None and self._prepared[0] == n:
+            put_plan = self._prepared[2]
+        else:
+            put_plan = self._put_plan(n)
+        cnt = 0
+        for emissions in put_plan.values():
+            for _, triples, slab in emissions:
+                cnt += 1 if slab is not None else len(triples)
+        return cnt
+
+    def chunk_put_count(self) -> int:
+        """Per-rank chunk puts (the descriptor count of the pre-slab
+        lowering; bytes moved are identical)."""
+        return sum(len(i.put_triples())
+                   for i in self.program.instructions() if i.op is Op.PUT)
 
     # -- static analysis ----------------------------------------------------
     def _wait_put_rounds(self, n: int):
@@ -452,10 +542,13 @@ class PallasExecutor:
                              if i.op is Op.PUT})
         round_to_pair = {r: i % _NUM_SEM_PAIRS for i, r in enumerate(put_rounds)}
         if self._prepared is not None and self._prepared[0] == n:
-            wait_to_rounds = self._prepared[1]
+            _, wait_to_rounds, put_plan, wait_plan = self._prepared
         else:
             wait_to_rounds = self._wait_put_rounds(n)
+            put_plan = self._put_plan(n)
+            wait_plan = self._wait_plan(n, wait_to_rounds)
         wrap = len(put_rounds) > _NUM_SEM_PAIRS
+        self.last_trace_descriptors = 0
 
         for ri, rnd in enumerate(p.rounds):
             if (wrap and ri in round_to_pair and round_to_pair[ri] == 0
@@ -464,19 +557,34 @@ class PallasExecutor:
             for instr in rnd.instrs:
                 if instr.op is Op.PUT:
                     send_sem, recv_sem = sem_pairs[round_to_pair[ri]]
-                    for (sb, si), (db, di), to in instr.put_triples():
-                        shift = to.shift()
+                    for shift, triples, slab in put_plan[id(instr)]:
                         peer = (me + shift) % n
                         chan = MemoryChannel(axis, peer, send_sem, recv_sem)
-                        chan.put(refs[sb].at[si(me, n)],
-                                 refs[db].at[di(me, n)]).flush()
+                        if slab is not None:
+                            # one strided (contiguous-slab) descriptor
+                            # moves all k chunks of the group
+                            sb, db, s_base, d_base, k = slab
+                            chan.put(
+                                refs[sb].at[pl.ds(k * s_base(me, n), k)],
+                                refs[db].at[pl.ds(k * d_base(me, n), k)],
+                            ).flush()
+                            self.last_trace_descriptors += 1
+                        else:
+                            for (sb, si), (db, di), _ in triples:
+                                chan.put(refs[sb].at[si(me, n)],
+                                         refs[db].at[di(me, n)]).flush()
+                                self.last_trace_descriptors += 1
                 elif instr.op is Op.WAIT:
-                    for (dst, _), rid in zip(instr.wait_chunks(),
-                                             wait_to_rounds[id(instr)]):
+                    for rid, db, base, k in wait_plan[id(instr)]:
                         send_sem, recv_sem = sem_pairs[round_to_pair[rid]]
-                        db, di = dst
-                        prim.wait_recv_into(refs[db].at[di(me, n)],
-                                            send_sem, recv_sem, {axis: me})
+                        if k > 1:
+                            prim.wait_recv_into(
+                                refs[db].at[pl.ds(k * base(me, n), k)],
+                                send_sem, recv_sem, {axis: me})
+                        else:
+                            prim.wait_recv_into(refs[db].at[base(me, n)],
+                                                send_sem, recv_sem,
+                                                {axis: me})
                 elif instr.op is Op.FLUSH:
                     continue  # puts are flushed at issue in this executor
                 elif instr.op is Op.BARRIER:

@@ -27,7 +27,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.config import ModelConfig
 
 __all__ = ["MeshAxes", "param_pspecs", "batch_pspec", "shardings_for",
-           "cache_pspecs", "logical_rules"]
+           "cache_pspecs", "logical_rules", "strip_axis",
+           "explicit_decode_supported", "explicit_decode_pspecs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,6 +223,73 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, ax: MeshAxes,
                  P(None, None, m if _div(cfg.d_model, mesh, m) else None, None))
         cache["ssm"] = [sspec for _ in wins]
     return cache
+
+
+def strip_axis(specs, axis: str):
+    """Specs with every occurrence of ``axis`` removed (those dims fall
+    back to replicated over it). Used by the explicit-TP decode step,
+    whose manual body needs the KV cache whole along the model axis."""
+    def one(sp):
+        if not isinstance(sp, P):
+            return sp
+        ents = []
+        for e in sp:
+            if e == axis:
+                ents.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a != axis)
+                ents.append(kept if kept else None)
+            else:
+                ents.append(e)
+        return P(*ents)
+
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def explicit_decode_supported(cfg: ModelConfig, mesh: Mesh,
+                              ax: MeshAxes = MeshAxes()) -> tuple[bool, str]:
+    """Can the explicit-TP decode step (shard_map MANUAL over ``model``,
+    per-layer plan-replay AllReduce) run this config on this mesh?
+
+    The manual body hand-writes the TP math, so it needs the clean
+    tensor-parallel factorization: query/output heads sharded over the
+    axis, MLP hidden dim sharded, KV projections replicated (the cache
+    keeps full KV heads). Anything else falls back to auto/GSPMD."""
+    from repro.models.blocks import padded_heads
+
+    m = ax.model
+    tp = int(mesh.shape.get(m, 1)) if m in mesh.shape else 1
+    if tp <= 1:
+        return False, "no TP axis of size > 1: nothing to make explicit"
+    if cfg.family != "dense":
+        return False, (f"family {cfg.family!r} not supported "
+                       "(explicit-TP decode covers dense attention+MLP)")
+    nh, _ = padded_heads(cfg)
+    if nh % tp != 0:
+        return False, f"attention heads {nh} not divisible by TP={tp}"
+    if cfg.d_ff % tp != 0:
+        return False, f"d_ff {cfg.d_ff} not divisible by TP={tp}"
+    return True, ""
+
+
+def explicit_decode_pspecs(cfg: ModelConfig, mesh: Mesh,
+                           ax: MeshAxes = MeshAxes()) -> dict:
+    """Param specs for the explicit-TP decode step: `param_pspecs` with
+    the KV projections forced replicated (every rank computes the full
+    new K/V token, so the TP-replicated cache stays consistent without
+    a gather). Query/output heads and the MLP hidden dim keep their TP
+    sharding — their partial sums are what the per-layer plan-replay
+    AllReduce completes."""
+    ok, why = explicit_decode_supported(cfg, mesh, ax)
+    if not ok:
+        raise ValueError(f"explicit-TP decode unsupported here: {why}")
+    specs = param_pspecs(cfg, mesh, ax)
+    rep_kv = P(None, None, None, None)
+    layers = []
+    for layer in specs["layers"]:
+        layer = dict(layer, attn=dict(layer["attn"], wk=rep_kv, wv=rep_kv))
+        layers.append(layer)
+    return dict(specs, layers=layers)
 
 
 def apply_fsdp(specs, shapes, mesh: Mesh, ax: MeshAxes = MeshAxes(),

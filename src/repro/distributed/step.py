@@ -31,7 +31,8 @@ from repro.models.config import ModelConfig
 from repro.train import optimizer as opt
 
 __all__ = ["make_train_step", "make_serve_step", "init_sharded",
-           "make_dp_communicators"]
+           "make_dp_communicators", "TPDecodeComms", "compile_decode_plans",
+           "local_batch", "slot_buckets"]
 
 
 def _dp_axes(mesh: Mesh, ax: shd.MeshAxes) -> tuple[str, ...]:
@@ -200,13 +201,138 @@ def _strip_dp(pspecs):
     return pspecs
 
 
+# ---------------------------------------------------------------------------
+# explicit-TP decode (paper §5.2: compiled plans on the token hot path)
+# ---------------------------------------------------------------------------
+def local_batch(mesh: Mesh, ax: shd.MeshAxes, batch: int) -> tuple[int, bool]:
+    """(per-device batch rows along the DP axes, whether the batch is
+    DP-sharded at all). Mirrors the decode-cache/token sharding rule."""
+    dp = _dp_axes(mesh, ax)
+    ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if batch % max(ndp, 1) == 0 and batch >= ndp:
+        return batch // max(ndp, 1), bool(dp) and ndp > 1
+    return batch, False
+
+
+def slot_buckets(batch_local: int) -> tuple[int, ...]:
+    """Active-slot bucket ladder for bucketed plan compilation: powers
+    of two up to (and always including) the full local batch."""
+    out, k = [], 1
+    while k < batch_local:
+        out.append(k)
+        k *= 2
+    out.append(batch_local)
+    return tuple(out)
+
+
+def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
+                         tp: int, buckets=None) -> dict:
+    """The decode-step collective plans, compiled once at init and
+    replayed every generated token (paper §5.2):
+
+    * ``layer_allreduce`` — the per-layer hidden-state AllReduce
+      (attention out-proj and MLP down-proj partials; also the
+      vocab-sharded embedding gather-reduce), bucketed over active-slot
+      counts so continuous batching replays a handful of plans instead
+      of compiling per distinct shape;
+    * ``logits_allgather`` — the final vocab-sharded logits gather
+      (only when the vocab divides the TP axis).
+    """
+    buckets = tuple(buckets) if buckets else slot_buckets(batch_local)
+    plans = {"layer_allreduce": comm.plan_for(
+        "all_reduce", (batch_local, cfg.d_model), cfg.dtype,
+        buckets=buckets)}
+    if cfg.vocab % tp == 0:
+        plans["logits_allgather"] = comm.plan_for(
+            "all_gather", (batch_local, cfg.vocab // tp), "float32",
+            buckets=buckets)
+    return plans
+
+
+class TPDecodeComms:
+    """The per-layer TP communication hook the explicit decode step
+    hands to ``transformer.decode_step`` (see its docstring).
+
+    Every method is pure plan replay inside traced code: the
+    :class:`~repro.core.comm.BucketedPlan` s were compiled at engine /
+    step-build time, so tracing the decode step does zero selection,
+    zero pass-pipeline work, and zero executor lowering — the MSCCL++
+    deployment contract, now on the token hot path.
+    """
+
+    def __init__(self, cfg: ModelConfig, axis: str, tp: int, *,
+                 hidden_plan, logits_plan=None):
+        self.cfg = cfg
+        self.axis = axis
+        self.tp = tp
+        self.hidden_plan = hidden_plan      # bucketed all_reduce (b, d_model)
+        self.logits_plan = logits_plan      # bucketed all_gather or None
+        self.vocab_sharded = logits_plan is not None
+
+    def head_offset(self, nh_local: int):
+        """Global index of this shard's first query head."""
+        return jax.lax.axis_index(self.axis) * nh_local
+
+    def hidden(self, x):
+        """AllReduce a (b, s, d_model) hidden-state partial over TP."""
+        b, s, d = x.shape
+        return self.hidden_plan(x.reshape(b * s, d)).reshape(b, s, d)
+
+    def embed(self, table, tokens):
+        """Lookup on a (possibly vocab-sharded) embedding table: mask
+        out-of-shard tokens to zero rows, then the same AllReduce plan
+        completes the gather (zero rows are exact under the sum)."""
+        if not self.vocab_sharded:
+            return table[tokens]
+        vloc = table.shape[0]
+        off = jax.lax.axis_index(self.axis) * vloc
+        idx = tokens - off
+        ok = (idx >= 0) & (idx < vloc)
+        x = jnp.where(ok[:, None], table[jnp.clip(idx, 0, vloc - 1)], 0)
+        return self.hidden_plan(x)
+
+    def logits(self, params, hidden):
+        """(b, 1, d_model) hidden -> (b, vocab) f32 logits, gathering
+        the vocab-sharded columns through the compiled AllGather plan."""
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        local = jnp.einsum("bsd,dv->bsv", hidden, w).astype(jnp.float32)[:, 0]
+        if not self.vocab_sharded:
+            return local
+        b = local.shape[0]
+        g = self.logits_plan(local)                      # (tp*b, vocab/tp)
+        return g.reshape(self.tp, b, -1).transpose(1, 0, 2).reshape(b, -1)
+
+
 def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
                     batch: int, max_kv: int, donate: bool = True,
-                    fsdp: bool = False, kv_quant: bool = False):
+                    fsdp: bool = False, kv_quant: bool = False,
+                    mode: str = "auto", comm=None, manual_dp: bool = True):
     """jit'd one-token decode step bound to mesh shardings.
 
     serve_step(params, cache, tokens, pos) -> (logits, cache)
     ``kv_quant``: int8 KV cache with per-token scales (§Perf C).
+
+    Modes (the serving analogue of ``make_train_step``'s duality):
+
+    * ``auto``     — pjit/GSPMD partitions the decode step; XLA inserts
+      the per-layer TP psum (the NCCL-role baseline).
+    * ``explicit`` — the decode step runs inside a shard_map MANUAL over
+      the TP (``model``) axis, and the two per-layer hidden-state
+      AllReduces (attention out-proj, MLP down-proj) + the vocab-sharded
+      embedding/logits collectives are replays of init-compiled
+      :class:`~repro.core.comm.ExecutionPlan` s (bucketed over
+      active-slot counts) — the paper's §5.2 decode hot path. The KV
+      cache is kept whole along ``model`` (heads stay full per device;
+      only weights shard), so attention math is local; the DP axes are
+      included in the manual set by default (``manual_dp=True``), which
+      keeps the whole step fully manual and therefore runnable on
+      legacy jax. ``manual_dp=False`` leaves the DP axes to GSPMD —
+      partial-manual shard_map, guarded like ``make_train_step``.
+
+    ``comm``: the TP :class:`~repro.core.comm.Communicator` owning the
+    decode plans (the engine passes its own so init-compiled plans are
+    shared); built here when omitted.
     """
     pspecs = _pspecs(cfg, mesh, ax, fsdp)
     psh = shd.shardings_for(pspecs, mesh)
@@ -216,22 +342,84 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
     if kv_quant and "k" in cspecs:
         cspecs = dict(cspecs,
                       k_scale=list(cspecs["k"]), v_scale=list(cspecs["v"]))
-    csh = shd.shardings_for(cspecs, mesh)
     dp = _dp_axes(mesh, ax)
-    ndp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     d = dp if len(dp) > 1 else (dp[0] if dp else None)
-    tok_spec = P(d) if batch % max(ndp, 1) == 0 and batch >= ndp else P(None)
+    b_local, batch_sharded = local_batch(mesh, ax, batch)
+    tok_spec = P(d) if batch_sharded else P(None)
     tsh = NamedSharding(mesh, tok_spec)
 
-    def step(params, cache, tokens, pos):
-        return tf.decode_step(params, cfg, cache, tokens, pos)
+    if mode == "auto":
+        csh = shd.shardings_for(cspecs, mesh)
 
+        def step(params, cache, tokens, pos):
+            return tf.decode_step(params, cfg, cache, tokens, pos)
+
+        return jax.jit(
+            step,
+            in_shardings=(psh, csh, tsh, None),
+            out_shardings=(None, csh),
+            donate_argnums=(1,) if donate else (),
+        ), cspecs
+
+    if mode != "explicit":
+        raise ValueError(mode)
+
+    if kv_quant:
+        raise ValueError("mode='explicit' does not support kv_quant")
+    if fsdp:
+        raise ValueError(
+            "mode='explicit' does not support fsdp: the manual body uses "
+            "the explicit-TP param layout, not the ZeRO-3 decoration")
+    ok, why = shd.explicit_decode_supported(cfg, mesh, ax)
+    if not ok:
+        raise ValueError(f"mode='explicit' unsupported here: {why}")
+    manual = {ax.model} | (set(dp) if manual_dp else set())
+    if set(mesh.axis_names) - manual:
+        from repro import compat
+        if not compat.HAS_PARTIAL_MANUAL_SHARD_MAP:
+            # The legacy auto= spelling aborts the whole process inside
+            # XLA's SPMD partitioner — fail loudly and catchably instead
+            # (mirrors make_train_step's guard). manual_dp=True needs no
+            # partial-manual support: every mesh axis is manual.
+            raise NotImplementedError(
+                "mode='explicit' with auto (GSPMD) mesh axes needs "
+                "partial-manual shard_map (jax with shard_map "
+                "axis_names=); this jax only has the legacy auto= "
+                "spelling, which crashes XLA on this pattern. Keep "
+                "manual_dp=True so the step is fully manual.")
+
+    tp = int(mesh.shape[ax.model])
+    pspecs_x = shd.explicit_decode_pspecs(cfg, mesh, ax)
+    cspecs_x = shd.strip_axis(cspecs, ax.model)   # cache whole along TP
+    csh_x = shd.shardings_for(cspecs_x, mesh)
+    if comm is None:
+        comm = comm_lib.Communicator(ax.model, n=tp,
+                                     backend=comm_lib.default_backend())
+    plans = compile_decode_plans(cfg, comm, batch_local=b_local, tp=tp)
+    comms = TPDecodeComms(cfg, ax.model, tp,
+                          hidden_plan=plans["layer_allreduce"],
+                          logits_plan=plans.get("logits_allgather"))
+    logit_spec = P(d if batch_sharded else None, None)
+
+    def local_step(params, cache, tokens, pos):
+        return tf.decode_step(params, cfg, cache, tokens, pos, comms=comms)
+
+    mapped = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(pspecs_x, cspecs_x, tok_spec, P()),
+        out_specs=(logit_spec, cspecs_x),
+        axis_names=manual, check_vma=False)
+
+    # Params deliberately carry no jit in_sharding: the engine's arrays
+    # live in their auto-mode (GSPMD) placement — shard_map's in_specs
+    # reshard them to the explicit layout (KV replicated) inside the jit
+    # instead of rejecting the committed arrays at the boundary.
     return jax.jit(
-        step,
-        in_shardings=(psh, csh, tsh, None),
-        out_shardings=(None, csh),
+        mapped,
+        in_shardings=(None, csh_x, tsh, None),
+        out_shardings=(NamedSharding(mesh, logit_spec), csh_x),
         donate_argnums=(1,) if donate else (),
-    ), cspecs
+    ), cspecs_x
 
 
 def make_prefill_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,

@@ -33,6 +33,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--dp", type=int, default=2)
     ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--mode", choices=("auto", "explicit"), default="auto",
+                    help="decode partitioning: GSPMD (auto) or the "
+                         "explicit-TP plan-replay hot path (§5.2)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -46,7 +49,9 @@ def main():
     params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
     eng = Engine(cfg, params, mesh,
                  ServeConfig(batch=args.batch, max_kv=args.max_kv,
-                             temperature=args.temperature))
+                             temperature=args.temperature, mode=args.mode))
+    if args.mode != eng.mode:
+        print(f"note: mode={args.mode} unavailable, running {eng.mode}")
     prompts = np.random.RandomState(0).randint(
         0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
 
@@ -56,8 +61,10 @@ def main():
     t0 = time.perf_counter()
     out = eng.decode(logits, num_tokens=args.tokens)
     t_dec = time.perf_counter() - t0
-    print(f"arch={cfg.name} prefill {t_pre*1e3:.0f}ms, "
-          f"decode {t_dec/args.tokens*1e3:.1f}ms/token × {args.batch} seqs")
+    rep = eng.plan_report()
+    print(f"arch={cfg.name} mode={eng.mode} prefill {t_pre*1e3:.0f}ms, "
+          f"decode {t_dec/args.tokens*1e3:.1f}ms/token × {args.batch} seqs "
+          f"(pred comm {rep['predicted_comm_us_per_token']}us/token)")
     print("seq0:", out[0][:12].tolist())
 
 

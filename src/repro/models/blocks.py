@@ -167,7 +167,8 @@ def _chunked_attn(q, k, v, cfg, *, window: Optional[int], chunk: int):
 
 
 def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
-                     *, window: Optional[int], k_scale=None, v_scale=None):
+                     *, window: Optional[int], k_scale=None, v_scale=None,
+                     head_offset=None):
     """One-token decode with KV cache.
 
     x: (batch, 1, d_model); cache_k/v: (batch, nkv, max_kv, hd);
@@ -178,12 +179,23 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     int8, new tokens are written as round(x/s·127) with a per-(batch,
     head, token) scale; the read path folds the scale into the attention
     products so the full-cache stream stays 1 byte/element.
+
+    ``head_offset`` (explicit-TP decode, §5.2 hot path): when given, ``p``
+    holds a contiguous slice of the query/output heads starting at that
+    global head index, while the KV projections and cache are replicated
+    over the TP axis. Each local head gathers its own KV head, so any
+    head split works (no per-shard whole-group requirement), and the
+    returned projection is this shard's PARTIAL sum over d_model — the
+    caller completes it with the per-layer AllReduce plan.
     """
     b, _, d = x.shape
     hd = cfg.hd
     nh, nkv = padded_heads(cfg)
     max_kv = cache_k.shape[2]
     quant = cache_k.dtype == jnp.int8
+    if quant and head_offset is not None:
+        raise NotImplementedError(
+            "explicit-TP decode does not support the int8 KV cache")
 
     q = jnp.einsum("bsd,dnh->bnsh", x, p["wq"])
     k_new = jnp.einsum("bsd,dnh->bnsh", x, p["wk"])
@@ -215,6 +227,11 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     cache_v, v_scale = _write(cache_v, v_scale, v_new)
 
     g = nh // nkv
+    if head_offset is not None:
+        return (_decode_attn_tp_shard(p, q, cache_k, cache_v, pos, cfg,
+                                      window=window, head_offset=head_offset,
+                                      slot=slot, g=g),
+                cache_k, cache_v)
     q = q.reshape(b, nkv, g, 1, hd)
     if quant:
         # int8 dot in bf16 compute (C2: halves the dequant materialization
@@ -253,6 +270,39 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     if quant:
         return ret, cache_k, cache_v, k_scale, v_scale
     return ret, cache_k, cache_v
+
+
+def _decode_attn_tp_shard(p: Params, q, cache_k, cache_v, pos, cfg,
+                          *, window: Optional[int], head_offset, slot, g):
+    """Per-shard attention for the explicit-TP decode path.
+
+    q: (b, nh_local, 1, hd) — this shard's heads; cache_k/v hold the
+    FULL (replicated) KV heads. Each local head attends to its own KV
+    head via a gather, computing exactly the reference per-head math;
+    the final ``wo`` projection over local heads is a partial sum the
+    caller AllReduces."""
+    b, nh_l, _, hd = q.shape
+    max_kv = cache_k.shape[2]
+    hid = head_offset + jnp.arange(nh_l)            # global head ids
+    k_sel = jnp.take(cache_k, hid // g, axis=1)     # (b, nh_l, max_kv, hd)
+    v_sel = jnp.take(cache_v, hid // g, axis=1)
+    logits = jnp.einsum("bnsh,bnth->bnst", q, k_sel).astype(jnp.float32)
+    logits *= hd ** -0.5
+    k_pos = jnp.arange(max_kv)
+    if window is not None:
+        age = (slot - k_pos) % max_kv
+        valid = (age < jnp.minimum(pos + 1, max_kv))
+    else:
+        valid = k_pos <= pos
+    logits = jnp.where(valid[None, None, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnst,bnth->bnsh", probs, v_sel)
+    nh, _ = padded_heads(cfg)
+    if nh > cfg.n_heads:
+        head_mask = (hid < cfg.n_heads).astype(out.dtype)
+        out = out * head_mask[None, :, None, None]
+    return jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
 
 
 # ---------------------------------------------------------------------------

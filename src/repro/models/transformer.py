@@ -212,11 +212,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_kv: int, dtype=None):
     return cache
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
     """tokens: (b,) int32 (or (b, d) embeddings); pos: scalar int32.
-    Returns (logits (b, vocab) f32, new cache)."""
+    Returns (logits (b, vocab) f32, new cache).
+
+    ``comms`` — the per-layer TP communication hook of the explicit
+    decode path (``repro.distributed.step.TPDecodeComms``). When given,
+    this function runs INSIDE a shard_map that is manual over the TP
+    axis: parameters arrive as TP shards, the two per-layer hidden-state
+    partial sums (attention out-proj, MLP down-proj) are completed by
+    ``comms.hidden`` (a replay of the engine's init-compiled AllReduce
+    plan, not a GSPMD-inserted psum), the embedding lookup and final
+    logits go through ``comms.embed`` / ``comms.logits`` (vocab-sharded
+    tables), and attention receives its shard's global head offset.
+    ``comms=None`` is the auto/GSPMD path, unchanged.
+    """
+    if comms is not None and (cfg.family != "dense" or "k_scale" in cache):
+        raise NotImplementedError(
+            "explicit-TP decode supports the dense family with an "
+            "unquantized KV cache")
     if not jnp.issubdtype(tokens.dtype, jnp.integer):
         x = tokens.astype(cfg.jdtype)[:, None]          # embedded input
+    elif comms is not None:
+        x = comms.embed(params["embed"], tokens)[:, None]
     else:
         x = params["embed"][tokens][:, None]            # (b, 1, d)
     wins = layer_windows(cfg)
@@ -246,18 +264,26 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
                 new_ksc.append(ks_upd)
                 new_vsc.append(vs_upd)
             else:
+                ho = (comms.head_offset(lp["attn"]["wq"].shape[-2])
+                      if comms is not None else None)
                 att, k_upd, v_upd = blocks.decode_attention(
-                    lp["attn"], h, ck[i], cv[i], pos, cfg, window=win)
+                    lp["attn"], h, ck[i], cv[i], pos, cfg, window=win,
+                    head_offset=ho)
             if cfg.family == "hybrid":
                 s_out, s_new = ssm.ssm_decode_step(lp["ssm"], h, sst[i], cfg)
                 att = (att + s_out) * 0.5
                 new_s.append(s_new)
+            if comms is not None:
+                att = comms.hidden(att)     # complete the out-proj partial
             x = x + att
             h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
             if cfg.family == "moe":
                 x = x + blocks.moe_layer(lp["moe"], h, cfg)
             else:
-                x = x + blocks.mlp_swiglu(lp["mlp"], h)
+                mlp_out = blocks.mlp_swiglu(lp["mlp"], h)
+                if comms is not None:
+                    mlp_out = comms.hidden(mlp_out)  # down-proj partial
+                x = x + mlp_out
             new_k.append(k_upd)
             new_v.append(v_upd)
         return x, (new_k, new_v, new_s, new_ksc, new_vsc)
@@ -275,4 +301,6 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
         new_cache["k_scale"] = nksc
         new_cache["v_scale"] = nvsc
     h = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if comms is not None:
+        return comms.logits(params, h), new_cache
     return logits_fn(params, cfg, h)[:, 0], new_cache

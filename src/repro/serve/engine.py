@@ -7,13 +7,21 @@ concentrates in decode — the asymmetry Figure 10 reports.
 
 Deployment shape (§5.2): the engine owns a :class:`Communicator` for
 the TP axis and compiles the decode-step collective plans at __init__
-— the per-layer hidden-state AllReduce shape every generated token
-implies. ``plan_report()`` exposes their cost cards (per-token
-predicted comm µs) before a single request is served. NOTE: today's
-jitted decode step partitions via GSPMD (auto mode), so these plans
-are the *planning/inspection* artifact — the communicator and its
-cache are in place for the explicit-TP decode step (ROADMAP open
-item), which will replay them on the hot path.
+— the per-layer hidden-state AllReduce and the vocab-sharded logits
+AllGather, **bucketed** over active-slot counts
+(:func:`~repro.distributed.step.compile_decode_plans`), so a
+continuous-batching stack with varying slot occupancy replays a
+handful of plans instead of compiling per distinct shape.
+
+With ``mode="explicit"`` the decode step itself is the explicit-TP
+shard_map path (:func:`~repro.distributed.step.make_serve_step`): every
+generated token REPLAYS those init-compiled plans on the hot path —
+compile counters stay flat across decode calls. ``mode="auto"`` keeps
+the GSPMD baseline (XLA-inserted psum); the plans then remain the
+cost/inspection artifact. When explicit mode is unavailable (family /
+divisibility / jax capability), the engine warns and falls back to
+auto. ``plan_report()`` exposes per-bucket cost cards and dispatch hit
+counts before (and while) serving.
 
 The engine supports continuous-batching-lite: a fixed slot count,
 per-slot position counters, and slot recycling when a sequence emits
@@ -22,6 +30,7 @@ EOS.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -30,7 +39,8 @@ import numpy as np
 
 from repro.core import comm as comm_lib
 from repro.distributed import sharding as shd
-from repro.distributed.step import make_serve_step
+from repro.distributed.step import (compile_decode_plans, local_batch,
+                                    make_serve_step)
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 
@@ -43,54 +53,80 @@ class ServeConfig:
     max_kv: int = 1024
     eos_id: int = 2
     temperature: float = 0.0       # 0 -> greedy
+    mode: str = "auto"             # 'auto' (GSPMD) | 'explicit' (plan replay)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, mesh, serve_cfg: ServeConfig,
                  ax: shd.MeshAxes = shd.MeshAxes(),
-                 comm: Optional[comm_lib.Communicator] = None):
+                 comm: Optional[comm_lib.Communicator] = None,
+                 mode: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
         self.scfg = serve_cfg
-        self.step_fn, _ = make_serve_step(
-            cfg, mesh, ax, batch=serve_cfg.batch, max_kv=serve_cfg.max_kv,
-            donate=True)
-        # -- compile-once planning (§5.2): TP communicator + decode plans
-        # (cost/inspection artifacts until the explicit-TP decode step
-        # lands — see module docstring)
+        mode = mode if mode is not None else serve_cfg.mode
+        if mode not in ("auto", "explicit"):
+            raise ValueError(f"unknown serve mode {mode!r}")
+
+        # -- compile-once planning (§5.2): TP communicator + bucketed
+        # decode plans, BEFORE the step function so explicit mode replays
+        # exactly these artifacts
         tp = int(mesh.shape.get(ax.model, 1))
         self.comm = comm if comm is not None else comm_lib.Communicator(
             ax.model, n=tp, backend=comm_lib.default_backend())
+        b_local, _ = local_batch(mesh, ax, serve_cfg.batch)
         self.decode_plans: dict = {}
         if tp > 1:
-            # the per-layer decode AllReduce: one token's hidden state
-            # per slot, summed over the TP axis after the sharded FFN/
-            # attention matmuls — identical shape every layer and every
-            # step, so ONE plan covers the whole decode path.
-            self.decode_plans["layer_allreduce"] = self.comm.compile(
-                "all_reduce", (serve_cfg.batch, cfg.d_model), cfg.dtype)
-            # logits gather: each TP shard holds vocab/tp columns
-            if cfg.vocab % tp == 0:
-                self.decode_plans["logits_allgather"] = self.comm.compile(
-                    "all_gather", (serve_cfg.batch, cfg.vocab // tp),
-                    cfg.dtype)
+            self.decode_plans = compile_decode_plans(
+                cfg, self.comm, batch_local=b_local, tp=tp)
+
+        self.mode = mode
+        if mode == "explicit":
+            try:
+                self.step_fn, _ = make_serve_step(
+                    cfg, mesh, ax, batch=serve_cfg.batch,
+                    max_kv=serve_cfg.max_kv, donate=True, mode="explicit",
+                    comm=self.comm)
+            except (NotImplementedError, ValueError) as e:
+                warnings.warn(
+                    f"mode='explicit' unavailable ({e}); falling back to "
+                    f"auto (GSPMD) decode", stacklevel=2)
+                self.mode = "auto"
+        if self.mode == "auto":
+            self.step_fn, _ = make_serve_step(
+                cfg, mesh, ax, batch=serve_cfg.batch,
+                max_kv=serve_cfg.max_kv, donate=True)
         self.cache = tf.init_cache(cfg, serve_cfg.batch, serve_cfg.max_kv)
         self.pos = 0
         self.active = np.zeros(serve_cfg.batch, bool)
 
     def plan_report(self) -> dict:
-        """Cost cards of the decode-step plans plus the per-token
-        predicted communication time (n_layers × layer AllReduce +
-        final logits gather)."""
-        cards = {k: p.cost_card() for k, p in self.decode_plans.items()}
+        """Per-bucket cost cards + dispatch hit counts of the decode-step
+        plans, plus the per-token predicted communication time (2
+        AllReduces/layer + embedding gather-reduce + final logits
+        gather, at full slot occupancy)."""
+        cards = {}
         per_tok = 0.0
-        if "layer_allreduce" in self.decode_plans:
-            per_tok += (self.cfg.n_layers
-                        * self.decode_plans["layer_allreduce"].estimate_us)
-        if "logits_allgather" in self.decode_plans:
-            per_tok += self.decode_plans["logits_allgather"].estimate_us
-        return dict(plans=cards, predicted_comm_us_per_token=round(per_tok, 2),
+        for name, p in self.decode_plans.items():
+            if isinstance(p, comm_lib.BucketedPlan):
+                cards[name] = p.report()
+            else:
+                cards[name] = p.cost_card()
+        ar = self.decode_plans.get("layer_allreduce")
+        if ar is not None:
+            top = ar.plans[ar.buckets[-1]] if isinstance(
+                ar, comm_lib.BucketedPlan) else ar
+            per_tok += 2 * self.cfg.n_layers * top.estimate_us
+            if "logits_allgather" in self.decode_plans:
+                per_tok += top.estimate_us       # vocab-sharded embed lookup
+        ag = self.decode_plans.get("logits_allgather")
+        if ag is not None:
+            top = ag.plans[ag.buckets[-1]] if isinstance(
+                ag, comm_lib.BucketedPlan) else ag
+            per_tok += top.estimate_us
+        return dict(mode=self.mode, plans=cards,
+                    predicted_comm_us_per_token=round(per_tok, 2),
                     communicator=repr(self.comm))
 
     # -- prefill: feed prompts token-by-token through the decode path ------

@@ -354,10 +354,17 @@ def test_engine_builds_decode_plans_at_init():
     params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
     eng = Engine(cfg, params, mesh, ServeConfig(batch=8, max_kv=32))
     assert "layer_allreduce" in eng.decode_plans
-    plan = eng.decode_plans["layer_allreduce"]
-    assert plan.n == 4 and plan.shape == (8, cfg.d_model)
+    fam = eng.decode_plans["layer_allreduce"]
+    # bucketed over active-slot counts; the top bucket is the full local
+    # batch (8 global / dp=2) on the per-layer hidden-state shape
+    assert isinstance(fam, comm_lib.BucketedPlan)
+    assert fam.buckets[-1] == 4
+    plan = fam.plans[4]
+    assert plan.n == 4 and plan.shape == (4, cfg.d_model)
     report = eng.plan_report()
     assert report["predicted_comm_us_per_token"] > 0
+    assert set(report["plans"]["layer_allreduce"]["cards"]) == \
+        set(fam.buckets)
     # every decode step replays the same plans: no further compiles
     compiles_at_init = eng.comm.stats["compiles"]
     prompts = np.random.RandomState(0).randint(

@@ -1,0 +1,237 @@
+"""Explicit-TP decode hot path (paper §5.2): auto-vs-explicit greedy
+bit-equivalence, plan replay (compile counters flat across decode
+calls), bucketed plan compilation + pad-at-dispatch correctness, the
+partial-manual shard_map guard, and graceful auto fallback."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from repro.compat import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat, configs
+from repro.core import comm as comm_lib
+from repro.core.comm import BucketedPlan, Communicator
+from repro.distributed import sharding as shd
+from repro.distributed import step as step_mod
+from repro.serve.engine import Engine, ServeConfig
+
+
+def _mesh(shape, names):
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, names)
+
+
+def _cfg():
+    return configs.reduced(configs.get_config("qwen3-1.7b"))
+
+
+def _params(cfg, mesh):
+    return step_mod.init_sharded(cfg, mesh, shd.MeshAxes(),
+                                 jax.random.key(0))[0]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance contract: bit-identical greedy decode, pure plan replay
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dp,tp", [(1, 2), (2, 4)])
+def test_decode_auto_vs_explicit_bit_equal(dp, tp):
+    """Greedy tokens identical over >= 16 steps at TP in {2, 4}."""
+    mesh = _mesh((dp, tp), ("data", "model"))
+    cfg = _cfg()
+    params = _params(cfg, mesh)
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (4, 4)).astype(np.int32)
+
+    toks = {}
+    for mode in ("auto", "explicit"):
+        eng = Engine(cfg, params, mesh, ServeConfig(batch=4, max_kv=64),
+                     mode=mode)
+        assert eng.mode == mode          # no silent fallback
+        logits = eng.prefill(prompts)
+        toks[mode] = eng.decode(logits, num_tokens=16)
+    np.testing.assert_array_equal(toks["auto"], toks["explicit"])
+
+
+def test_explicit_decode_replays_not_recompiles():
+    """Compile counters stay flat across decode calls, and the bucketed
+    dispatch counters show the full-batch bucket serving the traffic."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    cfg = _cfg()
+    eng = Engine(cfg, _params(cfg, mesh), mesh,
+                 ServeConfig(batch=8, max_kv=32), mode="explicit")
+    assert eng.mode == "explicit"
+    # all plans exist before any request (init-compiled)
+    compiles_at_init = eng.comm.stats["compiles"]
+    assert compiles_at_init > 0
+    prompts = np.random.RandomState(1).randint(
+        0, cfg.vocab, (8, 3)).astype(np.int32)
+    logits = eng.prefill(prompts)
+    eng.decode(logits, num_tokens=2)
+    eng.decode(eng.prefill(prompts), num_tokens=2)   # second batch of calls
+    assert eng.comm.stats["compiles"] == compiles_at_init
+    ar = eng.decode_plans["layer_allreduce"]
+    assert isinstance(ar, BucketedPlan)
+    # batch=8, dp=2 -> 4 local rows: decode dispatches hit the 4-bucket
+    assert ar.hits[ar.bucket_for(4)] > 0
+
+
+def test_make_serve_step_explicit_standalone():
+    """make_serve_step(mode='explicit') without an engine: builds its
+    own communicator and produces finite logits of the right shape."""
+    from repro.models import transformer as tf
+
+    mesh = _mesh((2,), ("model",))
+    cfg = _cfg()
+    params = _params(cfg, mesh)
+    step, cspecs = step_mod.make_serve_step(
+        cfg, mesh, shd.MeshAxes(), batch=2, max_kv=16, donate=False,
+        mode="explicit")
+    cache = tf.init_cache(cfg, 2, 16)
+    logits, cache = step(params, cache,
+                         jnp.zeros((2,), jnp.int32), jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # the cache contract strips the model axis (kept whole along TP)
+    def _axes(sp):
+        out = []
+        for e in tuple(sp):
+            if isinstance(e, (tuple, list)):
+                out += list(e)
+            elif e is not None:
+                out.append(e)
+        return out
+
+    for sp in jax.tree.leaves(cspecs, is_leaf=lambda x: isinstance(x, P)):
+        assert "model" not in _axes(sp)
+
+
+# ---------------------------------------------------------------------------
+# bucketed plan compilation (continuous batching)
+# ---------------------------------------------------------------------------
+N = 4
+
+
+def _bucket_run(mesh4, fn, x):
+    return jax.jit(shard_map(fn, mesh=mesh4, in_specs=P("x", None, None),
+                             out_specs=P("x", None, None),
+                             check_vma=False))(x)
+
+
+def test_bucketed_allreduce_pads_at_dispatch(mesh4):
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("all_reduce", (8, 16), jnp.float32, buckets=(2, 4, 8))
+    assert comm.stats["compiles"] == 3          # one per bucket
+    for rows in (1, 2, 3, 5, 8):
+        x = jnp.asarray(np.random.RandomState(rows).randn(N, rows, 16),
+                        jnp.float32)
+        y = _bucket_run(mesh4, lambda xs: bp(xs[0])[None], x)
+        assert y.shape == (N, rows, 16)
+        np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x.sum(0)),
+                                   rtol=1e-5, atol=1e-5)
+    # five distinct row counts, three plans: bucketed, not per-shape
+    assert comm.stats["compiles"] == 3
+    assert bp.hits == {2: 2, 4: 1, 8: 2}
+
+
+def test_bucketed_allgather_slices_padding_per_block(mesh4):
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("all_gather", (4, 8), jnp.float32, buckets=(2, 4))
+    for rows in (1, 3, 4):
+        x = jnp.asarray(np.random.RandomState(rows).randn(N, rows, 8),
+                        jnp.float32)
+        y = _bucket_run(mesh4, lambda xs: bp(xs[0])[None], x)
+        assert y.shape == (N, N * rows, 8)
+        want = np.concatenate([np.asarray(x[j]) for j in range(N)], axis=0)
+        np.testing.assert_allclose(np.asarray(y[0]), want, rtol=1e-6)
+
+
+def test_bucketed_plan_cache_and_validation(mesh4):
+    comm = Communicator("x", n=N, backend="xla")
+    bp1 = comm.plan_for("all_reduce", (4, 8), jnp.float32, buckets=(2, 4))
+    compiles = comm.stats["compiles"]
+    # same key -> same artifact (shared hit counters), zero new compiles
+    bp2 = comm.plan_for("all_reduce", (4, 8), jnp.float32, buckets=(2, 4))
+    assert bp2 is bp1
+    assert comm.stats["compiles"] == compiles
+    # an overlapping plain compile hits the underlying plan cache
+    comm.compile("all_reduce", (4, 8), jnp.float32)
+    assert comm.stats["compiles"] == compiles
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        bp1.bucket_for(5)
+    with pytest.raises(ValueError, match="bucketed compilation supports"):
+        comm.plan_for("reduce_scatter", (4, 8), jnp.float32, buckets=(4,))
+    with pytest.raises(ValueError, match="exceed the largest bucket"):
+        comm.plan_for("all_reduce", (8, 8), jnp.float32, buckets=(2, 4))
+    # buckets=None degrades to a plain ExecutionPlan
+    plan = comm.plan_for("all_reduce", (4, 8), jnp.float32)
+    assert not isinstance(plan, BucketedPlan)
+
+
+# ---------------------------------------------------------------------------
+# guard + graceful fallback satellites
+# ---------------------------------------------------------------------------
+def test_explicit_guard_on_legacy_partial_manual():
+    """manual_dp=False leaves the DP axes to GSPMD — partial-manual
+    shard_map, which legacy jax cannot do: a clear error, not an XLA
+    crash (mirrors make_train_step's guard)."""
+    if compat.HAS_PARTIAL_MANUAL_SHARD_MAP:
+        pytest.skip("partial-manual shard_map available: guard inactive")
+    mesh = _mesh((2, 2), ("data", "model"))
+    with pytest.raises(NotImplementedError, match="partial-manual"):
+        step_mod.make_serve_step(_cfg(), mesh, shd.MeshAxes(), batch=4,
+                                 max_kv=16, mode="explicit",
+                                 manual_dp=False)
+
+
+@pytest.mark.skipif(
+    not compat.HAS_PARTIAL_MANUAL_SHARD_MAP,
+    reason="legacy shard_map auto= CHECK-crashes XLA on partial-manual")
+def test_explicit_partial_manual_runs():
+    """Modern jax: DP stays auto (GSPMD), only the TP axis is manual."""
+    from repro.models import transformer as tf
+
+    mesh = _mesh((2, 2), ("data", "model"))
+    cfg = _cfg()
+    params = _params(cfg, mesh)
+    step, _ = step_mod.make_serve_step(
+        cfg, mesh, shd.MeshAxes(), batch=4, max_kv=16, donate=False,
+        mode="explicit", manual_dp=False)
+    cache = tf.init_cache(cfg, 4, 16)
+    logits, _ = step(params, cache, jnp.zeros((4,), jnp.int32), jnp.int32(0))
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_explicit_falls_back_gracefully_for_unsupported_family():
+    """A family the manual body cannot shard (MoE) warns and serves via
+    auto instead of failing."""
+    mesh = _mesh((2, 4), ("data", "model"))
+    cfg = configs.reduced(configs.get_config("mixtral-8x22b"))
+    params = _params(cfg, mesh)
+    with pytest.warns(UserWarning, match="falling back to auto"):
+        eng = Engine(cfg, params, mesh, ServeConfig(batch=4, max_kv=32),
+                     mode="explicit")
+    assert eng.mode == "auto"
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (4, 2)).astype(np.int32)
+    toks = eng.decode(eng.prefill(prompts), num_tokens=2)
+    assert toks.shape == (4, 2)
+
+
+def test_explicit_rejects_kv_quant():
+    mesh = _mesh((2, 2), ("data", "model"))
+    with pytest.raises(ValueError, match="kv_quant"):
+        step_mod.make_serve_step(_cfg(), mesh, shd.MeshAxes(), batch=4,
+                                 max_kv=16, mode="explicit", kv_quant=True)
+
+
+def test_explicit_supported_predicate():
+    cfg = _cfg()
+    mesh = _mesh((2, 4), ("data", "model"))
+    ok, _ = shd.explicit_decode_supported(cfg, mesh)
+    assert ok
+    ok, why = shd.explicit_decode_supported(cfg, _mesh((8,), ("data",)))
+    assert not ok and "TP" in why
+    moe = configs.reduced(configs.get_config("mixtral-8x22b"))
+    ok, why = shd.explicit_decode_supported(moe, mesh)
+    assert not ok and "family" in why
