@@ -20,6 +20,12 @@ checked for bit-identical greedy output. Emitted into
 ``BENCH_collectives.json`` by ``run.py --json``; CPU wall time is
 structure only, not TPU time. ``explicit_decode_smoke`` is the
 2-device variant ``scripts/check.sh --smoke`` runs per PR.
+
+``moe_decode_auto_vs_explicit`` is the MoE analogue: a tiny
+expert-parallel model decoded both ways, the explicit path replaying
+the capacity-bucketed dispatch/combine all_to_all plan per layer
+(``decode_plans["moe_alltoall"]``) — the paper's §2.1 MoE collective
+on the §5.2 hot path. ``moe_decode_smoke`` is its 2-device smoke.
 """
 from __future__ import annotations
 
@@ -72,6 +78,18 @@ def _bench_cfg():
         d_ff=256, vocab=512, max_seq=256, dtype="float32")
 
 
+def _bench_moe_cfg():
+    """mixtral-shaped tiny MoE: 4 experts top-2, experts divisible by
+    the EP axis sizes the bench/smoke meshes use (2, 4)."""
+    from repro.models.config import ModelConfig, MoEConfig
+
+    return ModelConfig(
+        name="moe-decode-bench", family="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=512, max_seq=256, dtype="float32",
+        moe=MoEConfig(num_experts=4, top_k=2))
+
+
 def _run_engine(cfg, params, mesh, mode, *, batch, prompts, tokens):
     from repro.serve.engine import Engine, ServeConfig
 
@@ -88,11 +106,12 @@ def _run_engine(cfg, params, mesh, mode, *, batch, prompts, tokens):
     return toks, dt / tokens * 1e3, eng
 
 
-def decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
-                            dp=2, tp=4) -> dict:
-    """Measured auto (GSPMD psum) vs explicit (compiled-plan replay)
-    decode on the same params: ms/token both ways + bit-equality of the
-    greedy output. The §5.2 comparison the ROADMAP asks to record."""
+def _compare_modes(cfg, *, mesh_shape, axis_names, batch, prompt_len,
+                   seed, tokens):
+    """Shared scaffolding of every auto-vs-explicit comparison: build
+    the mesh, init params, decode the same prompts through both engine
+    modes. Returns (toks_auto, toks_explicit, ms_auto, ms_explicit,
+    explicit_engine)."""
     import jax
     import numpy as np
     from jax.sharding import Mesh
@@ -100,20 +119,31 @@ def decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
     from repro.distributed import sharding as shd
     from repro.distributed.step import init_sharded
 
-    cfg = _bench_cfg()
-    mesh = Mesh(np.asarray(jax.devices()[: dp * tp]).reshape(dp, tp),
-                ("data", "model"))
+    n = int(np.prod(mesh_shape))
+    mesh = Mesh(np.asarray(jax.devices()[:n]).reshape(mesh_shape),
+                axis_names)
     params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
-    prompts = np.random.RandomState(0).randint(
-        0, cfg.vocab, (batch, 4)).astype(np.int32)
-
+    prompts = np.random.RandomState(seed).randint(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
     toks_a, ms_a, _ = _run_engine(cfg, params, mesh, "auto",
                                   batch=batch, prompts=prompts, tokens=tokens)
     toks_e, ms_e, eng = _run_engine(cfg, params, mesh, "explicit",
                                     batch=batch, prompts=prompts,
                                     tokens=tokens)
+    return toks_a, toks_e, ms_a, ms_e, eng
+
+
+def decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
+                            dp=2, tp=4) -> dict:
+    """Measured auto (GSPMD psum) vs explicit (compiled-plan replay)
+    decode on the same params: ms/token both ways + bit-equality of the
+    greedy output. The §5.2 comparison the ROADMAP asks to record."""
+    cfg = _bench_cfg()
+    toks_a, toks_e, ms_a, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(dp, tp), axis_names=("data", "model"),
+        batch=batch, prompt_len=4, seed=0, tokens=tokens)
     point = dict(
-        bench="decode_auto_explicit", model=cfg.name, dp=dp, tp=tp,
+        bench="decode_auto_vs_explicit", model=cfg.name, dp=dp, tp=tp,
         batch=batch, tokens=tokens, n_layers=cfg.n_layers,
         backend=eng.comm.backend or "xla",
         wall_ms_per_token_auto=round(ms_a, 2),
@@ -128,27 +158,67 @@ def decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
     return point
 
 
+def moe_decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
+                                dp=2, ep=4) -> dict:
+    """Measured auto (GSPMD) vs explicit (plan-replay) decode for the
+    MoE family: the explicit step runs expert-parallel dispatch/combine
+    through the init-compiled capacity-bucketed all_to_all plan every
+    layer — the last big collective family the explicit path covers
+    (ROADMAP). Records ms/token both ways, bit-equality of the greedy
+    output, and the per-bucket dispatch hits of the moe_alltoall plan."""
+    cfg = _bench_moe_cfg()
+    toks_a, toks_e, ms_a, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(dp, ep), axis_names=("data", "model"),
+        batch=batch, prompt_len=4, seed=0, tokens=tokens)
+    rep = eng.plan_report()
+    point = dict(
+        bench="moe_decode_auto_vs_explicit", model=cfg.name, dp=dp, ep=ep,
+        batch=batch, tokens=tokens, n_layers=cfg.n_layers,
+        experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+        backend=eng.comm.backend or "xla",
+        wall_ms_per_token_auto=round(ms_a, 2),
+        wall_ms_per_token_explicit=round(ms_e, 2),
+        speedup_explicit=round(ms_a / ms_e, 3),
+        tokens_bit_identical=bool((toks_a == toks_e).all()),
+        moe_alltoall_buckets=rep["plans"]["moe_alltoall"]["buckets"],
+        moe_alltoall_hits=rep["plans"]["moe_alltoall"]["hits"],
+        predicted_comm_us_per_token=rep["predicted_comm_us_per_token"],
+    )
+    if points is not None:
+        points.append(point)
+    return point
+
+
+def moe_decode_smoke(tokens=4) -> dict:
+    """Seconds-fast 2-device explicit-MoE smoke (``scripts/check.sh
+    --smoke``): EP=2 model-only mesh, asserts the explicit step
+    generates through the bucketed all_to_all plan (compile counters
+    flat, per-bucket hits advancing) and matches the auto path's greedy
+    tokens bit-for-bit."""
+    cfg = _bench_moe_cfg()
+    toks_a, toks_e, _, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(2,), axis_names=("model",),
+        batch=2, prompt_len=3, seed=1, tokens=tokens)
+    assert (toks_a == toks_e).all(), "explicit MoE decode diverged from auto"
+    rep = eng.plan_report()
+    a2a = rep["plans"]["moe_alltoall"]
+    assert sum(a2a["hits"].values()) > 0, "moe_alltoall plan never dispatched"
+    return dict(ep=2, tokens=tokens, ms_per_token=round(ms_e, 2),
+                tokens_bit_identical=True,
+                buckets=a2a["buckets"], hits=a2a["hits"],
+                predicted_comm_us_per_token=rep[
+                    "predicted_comm_us_per_token"])
+
+
 def explicit_decode_smoke(tokens=4) -> dict:
     """Seconds-fast 2-device explicit-decode smoke
     (``scripts/check.sh --smoke``): TP=2 model-only mesh, asserts the
     explicit step generates, replays (compile counters flat), and
     matches the auto path's greedy tokens bit-for-bit."""
-    import jax
-    import numpy as np
-    from jax.sharding import Mesh
-
-    from repro.distributed import sharding as shd
-    from repro.distributed.step import init_sharded
-
     cfg = _bench_cfg()
-    mesh = Mesh(np.asarray(jax.devices()[:2]), ("model",))
-    params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
-    prompts = np.random.RandomState(1).randint(
-        0, cfg.vocab, (2, 3)).astype(np.int32)
-    toks_a, _, _ = _run_engine(cfg, params, mesh, "auto",
-                               batch=2, prompts=prompts, tokens=tokens)
-    toks_e, ms_e, eng = _run_engine(cfg, params, mesh, "explicit",
-                                    batch=2, prompts=prompts, tokens=tokens)
+    toks_a, toks_e, _, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(2,), axis_names=("model",),
+        batch=2, prompt_len=3, seed=1, tokens=tokens)
     assert (toks_a == toks_e).all(), "explicit decode diverged from auto"
     rep = eng.plan_report()
     return dict(tp=2, tokens=tokens, ms_per_token=round(ms_e, 2),
@@ -193,5 +263,14 @@ def main(rows=None):
                  p["wall_ms_per_token_explicit"],
                  f"{p['speedup_explicit']}x",
                  "bit-identical" if p["tokens_bit_identical"]
+                 else "MISMATCH"))
+    # ... and the MoE expert-parallel analogue (bucketed all_to_all plans)
+    m = moe_decode_auto_vs_explicit()
+    rows.append(("moe_decode_auto_vs_explicit",
+                 f"dp{m['dp']}_ep{m['ep']}_bsz{m['batch']}",
+                 m["wall_ms_per_token_auto"],
+                 m["wall_ms_per_token_explicit"],
+                 f"{m['speedup_explicit']}x",
+                 "bit-identical" if m["tokens_bit_identical"]
                  else "MISMATCH"))
     return rows

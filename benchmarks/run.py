@@ -52,6 +52,11 @@ def main(argv=None) -> None:
               f"{dec['ms_per_token']}ms/token "
               f"pred_comm={dec['predicted_comm_us_per_token']}us/token "
               f"bucket_hits={dec['hits']} — bit-identical to auto OK")
+        moe = llm_inference.moe_decode_smoke()
+        print(f"moe_decode_smoke ep={moe['ep']} "
+              f"{moe['ms_per_token']}ms/token "
+              f"a2a_buckets={moe['buckets']} a2a_hits={moe['hits']} "
+              f"— bit-identical to auto OK")
         return
     if "--json" in argv:
         from benchmarks import collectives, llm_inference
@@ -59,16 +64,21 @@ def main(argv=None) -> None:
         payload = collectives.json_payload()
         # §5.2 hot path: measured auto-vs-explicit decode comparison
         llm_inference.decode_auto_vs_explicit(payload["points"])
+        # ...and the MoE expert-parallel analogue (bucketed all_to_all)
+        llm_inference.moe_decode_auto_vs_explicit(payload["points"])
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
         out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
         geo = payload["geomean_speedup_allpairs"]
         dec = [p for p in payload["points"]
-               if p["bench"] == "decode_auto_explicit"][0]
+               if p["bench"] == "decode_auto_vs_explicit"][0]
+        moe = [p for p in payload["points"]
+               if p["bench"] == "moe_decode_auto_vs_explicit"][0]
         print(f"wrote {out} ({len(payload['points'])} points, "
               f"allpairs O0->O{payload['opt_default']} geomean "
               f"speedup {geo}x, decode auto->explicit "
-              f"{dec['speedup_explicit']}x)")
+              f"{dec['speedup_explicit']}x, MoE decode auto->explicit "
+              f"{moe['speedup_explicit']}x)")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

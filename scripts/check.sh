@@ -2,16 +2,58 @@
 # Tier-1 verification: the command every PR must keep green
 # (see ROADMAP.md). Run from anywhere.
 #
-#   scripts/check.sh            # full pytest suite (args pass through)
+#   scripts/check.sh            # full pytest suite + doc smoke
+#                               # (pytest args pass through)
 #   scripts/check.sh --smoke    # seconds-fast Communicator plan-path
 #                               # bench smoke (compile-once contract)
-#                               # + 2-device explicit-decode smoke
-#                               # (plan replay bit-identical to auto)
+#                               # + 2-device explicit-decode and
+#                               # explicit-MoE smokes (plan replay
+#                               # bit-identical to auto)
+#   scripts/check.sh --docs     # doc smoke only: execute every
+#                               # examples/*.py on the emulated mesh
+#                               # and check the docs pages exist —
+#                               # fails on drift so docs/examples
+#                               # cannot silently rot
 set -euo pipefail
 cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+run_docs() {
+  echo "== doc smoke: docs pages present =="
+  for f in README.md docs/architecture.md docs/plan-lifecycle.md docs/dsl.md; do
+    [[ -s "$f" ]] || { echo "MISSING: $f" >&2; exit 1; }
+  done
+  echo "== doc smoke: executing examples/*.py =="
+  # per-example fast args so the whole pass stays CI-sized; every
+  # example must exist AND run green (set -e aborts on the first drift)
+  shopt -s nullglob
+  local seen=0
+  for ex in examples/*.py; do
+    seen=1
+    args=()
+    case "$(basename "$ex")" in
+      serve_llm.py) args=(--tokens 4) ;;
+      # fresh ckpt dir per run: the example resumes from an existing
+      # one and a resumed 2-step run has no steps left to smoke
+      train_llm.py) args=(--steps 2 --tiny --ckpt-dir "$(mktemp -d)") ;;
+    esac
+    echo "-- $ex ${args[*]:-}"
+    # ${args[@]+...} guards the empty-array expansion under set -u on
+    # bash < 4.4 (macOS ships 3.2)
+    python "$ex" ${args[@]+"${args[@]}"} >/dev/null
+  done
+  [[ $seen == 1 ]] || { echo "no examples found" >&2; exit 1; }
+  echo "== doc smoke OK =="
+}
+
 if [[ "${1:-}" == "--smoke" ]]; then
   shift
-  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/run.py --smoke "$@"
+  python benchmarks/run.py --smoke "$@"
   exit 0
 fi
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+if [[ "${1:-}" == "--docs" ]]; then
+  run_docs
+  exit 0
+fi
+python -m pytest -x -q "$@"
+run_docs

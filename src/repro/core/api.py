@@ -75,7 +75,15 @@ def all_reduce(x, axis: str, *, backend: Optional[str] = None,
                algo: Optional[str] = None,
                link: Optional[sel.LinkModel] = None,
                opt_level: Optional[int] = None):
-    """x: (rows, cols) -> same shape, summed over `axis`."""
+    """x: (rows, cols) -> same shape, summed over `axis`.
+
+    Compile-or-hit-cache on the axis's default communicator; pure plan
+    replay on repeated shapes (docs/plan-lifecycle.md)::
+
+        y = api.all_reduce(grad_block, "data")          # selector picks
+        y = api.all_reduce(grad_block, "data",
+                           algo="allreduce_ring")       # forced algorithm
+    """
     return default_communicator(axis).all_reduce(
         x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
@@ -84,7 +92,12 @@ def all_gather(x, axis: str, *, backend: Optional[str] = None,
                algo: Optional[str] = None,
                link: Optional[sel.LinkModel] = None,
                opt_level: Optional[int] = None):
-    """x: (rows, cols) shard -> (N*rows, cols) gathered (tiled order)."""
+    """x: (rows, cols) shard -> (N*rows, cols) gathered (tiled order).
+
+    Example — assemble vocab-sharded logits columns::
+
+        full = api.all_gather(local_logits, "model")    # (tp*b, vocab/tp)
+    """
     return default_communicator(axis).all_gather(
         x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
@@ -93,7 +106,14 @@ def reduce_scatter(x, axis: str, *, backend: Optional[str] = None,
                    algo: Optional[str] = None,
                    link: Optional[sel.LinkModel] = None,
                    opt_level: Optional[int] = None):
-    """x: (N*rows, cols) -> (rows, cols): my reduced row-block."""
+    """x: (N*rows, cols) -> (rows, cols): my reduced row-block.
+
+    The input is N per-rank row blocks; block ``i`` of every rank is
+    summed and lands on rank ``i`` (phase 1 of the 2PH hierarchical
+    AllReduce)::
+
+        shard = api.reduce_scatter(grads_2d, "local")   # 1/L of the rows
+    """
     return default_communicator(axis).reduce_scatter(
         x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
@@ -104,7 +124,17 @@ def all_to_all(x, axis: str, *, backend: Optional[str] = None,
                opt_level: Optional[int] = None):
     """x: (N*rows, cols): row-block b -> device b; returns blocks
     received from each device, stacked. ``algo`` routes through the
-    selector's candidate set (unknown names raise)."""
+    selector's candidate set (unknown names raise).
+
+    The MoE dispatch/combine collective (paper §2.1)::
+
+        recv = api.all_to_all(dispatch_buffer, "model") # (ep*cap_block, d)
+
+    Serving hot paths should compile it bucketed over per-rank
+    capacities instead — ``Communicator.plan_for("all_to_all", shape,
+    dtype, buckets=...)`` pads token slots per block at dispatch
+    (docs/plan-lifecycle.md §7).
+    """
     return default_communicator(axis).all_to_all(
         x, backend=backend, algo=algo, link=link, opt_level=opt_level)
 
@@ -112,7 +142,10 @@ def all_to_all(x, axis: str, *, backend: Optional[str] = None,
 def broadcast(x, axis: str, root: int = 0, *, backend: Optional[str] = None,
               link: Optional[sel.LinkModel] = None,
               opt_level: Optional[int] = None):
-    """x: (rows, cols) -> root's buffer on every device."""
+    """x: (rows, cols) -> root's buffer on every device::
+
+        synced = api.broadcast(params_block, "data", root=0)
+    """
     return default_communicator(axis).broadcast(
         x, root=root, backend=backend, link=link, opt_level=opt_level)
 

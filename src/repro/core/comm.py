@@ -16,6 +16,11 @@ engine re-runs the same AllReduce). This module is that separation:
   ``estimate_us`` / ``comm_stats`` cost card. Plans are inspectable
   (``cost_card()``) and serializable (``to_json`` / ``from_json``) à la
   MSCCL++ execution-plan files.
+* :class:`BucketedPlan` — one plan per row-count bucket, padded at
+  dispatch with a per-family padding strategy (``_BUCKET_PAD``): tail
+  rows for the row-preserving collectives, per-rank-block slots for
+  the row-redistributing ones (all_to_all / reduce_scatter — the MoE
+  capacity-bucket case). Serializes like ``ExecutionPlan``.
 
 ``comm.compile("all_reduce", shape, dtype)`` returns a plan; calling
 ``plan(x)`` (or ``comm.all_reduce(x)``, which compiles-or-hits-cache)
@@ -26,6 +31,9 @@ exactly once per cache key.
 The module-level functions in :mod:`repro.core.api` are thin wrappers
 over per-axis process-default communicators (:func:`default_communicator`),
 preserving the drop-in NCCL-shaped surface.
+
+The full call-to-replay walkthrough (cache key fields, padding rules,
+the serving hot path) is ``docs/plan-lifecycle.md``.
 """
 from __future__ import annotations
 
@@ -63,12 +71,33 @@ _COLLECTIVE_IDS = {  # stable barrier-semaphore ids per collective type
 #: an un-split pipeline level (and reject non-divisible rows outright).
 _PADDABLE = frozenset({"all_reduce", "broadcast"})
 
-#: collectives ``plan_for(..., buckets=)`` can pad at dispatch: the
-#: padding rows either cancel (all_reduce/broadcast: zero rows stay
-#: zero) or land in a sliceable per-rank block (all_gather's tiled
-#: output). reduce_scatter / all_to_all redistribute rows across ranks,
-#: so bucket padding would corrupt the block layout.
-_BUCKETABLE = frozenset({"all_reduce", "broadcast", "all_gather"})
+#: Per-family padding strategy for ``plan_for(..., buckets=)`` — how a
+#: payload smaller than the compiled bucket is padded at dispatch and
+#: where the padding is sliced back out:
+#:
+#: * ``"rows"``   — row-preserving collectives (all_reduce, broadcast):
+#:   zero rows are appended to the payload tail and sliced off the
+#:   output tail; padding rows cancel exactly (zero stays zero under
+#:   sum / select).
+#: * ``"tiled"``  — all_gather: input rows pad at the tail, but the
+#:   tiled output interleaves every rank's block, so the padding is
+#:   sliced out of each per-rank block of the gathered result.
+#: * ``"blocks"`` — row-REDISTRIBUTING collectives (all_to_all,
+#:   reduce_scatter), whose (n*rows, cols) input embeds the per-rank
+#:   row distribution as n row blocks: buckets count rows PER BLOCK,
+#:   and each of the n blocks pads independently to the bucket so the
+#:   block boundaries the algorithm routes on stay aligned. all_to_all
+#:   slices the padding out of every received block; reduce_scatter's
+#:   padded rows reduce to zero and slice off the output tail. This is
+#:   the MoE expert-parallel case: the bucket is the per-rank token
+#:   CAPACITY of the dispatch/combine all_to_all.
+_BUCKET_PAD = {
+    "all_reduce": "rows",
+    "broadcast": "rows",
+    "all_gather": "tiled",
+    "all_to_all": "blocks",
+    "reduce_scatter": "blocks",
+}
 
 
 def default_backend() -> str:
@@ -161,13 +190,10 @@ class ExecutionPlan:
                 f"est={self.estimate_us:.2f}us)")
 
     # -- serialization -----------------------------------------------------
-    def to_json(self, **json_kw) -> str:
-        """Serialize the whole plan (program included) to JSON — the
-        MSCCL++ execution-plan-file shape: portable, diffable,
-        loadable without re-running selection or the pass pipeline."""
-        json_kw.setdefault("indent", 2)
-        json_kw.setdefault("sort_keys", True)
-        return json.dumps(dict(
+    def to_dict(self) -> dict:
+        """The plan as a JSON-compatible dict (program included) — the
+        unit :meth:`to_json` wraps and :class:`BucketedPlan` nests."""
+        return dict(
             format=PLAN_FORMAT_VERSION,
             collective=self.collective, algo=self.algo, axis=self.axis,
             n=self.n, shape=list(self.shape), dtype=self.dtype,
@@ -180,13 +206,26 @@ class ExecutionPlan:
             estimate_us=self.estimate_us,
             comm_stats=dict(self.comm_stats),
             program=program_to_dict(self.program),
-        ), **json_kw)
+        )
+
+    def to_json(self, **json_kw) -> str:
+        """Serialize the whole plan (program included) to JSON — the
+        MSCCL++ execution-plan-file shape: portable, diffable,
+        loadable without re-running selection or the pass pipeline."""
+        json_kw.setdefault("indent", 2)
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **json_kw)
 
     @classmethod
-    def from_json(cls, s: str) -> "ExecutionPlan":
-        d = json.loads(s)
+    def from_dict(cls, d: dict) -> "ExecutionPlan":
+        """Rebuild a plan from :meth:`to_dict` output: the program is
+        reconstructed and the executor lowering re-prepared, but no
+        selection and no pass-pipeline work re-runs."""
         if d.get("format") != PLAN_FORMAT_VERSION:
             raise ValueError(f"unsupported plan format {d.get('format')!r}")
+        if d.get("kind") == "bucketed_plan":
+            raise ValueError(
+                "bucketed plan payload; use BucketedPlan.from_json")
         program = program_from_dict(d["program"])
         executor = _build_executor(program, d["axis"], d["collective"],
                                    d["backend"], d["opt_level"], d["n"])
@@ -200,6 +239,10 @@ class ExecutionPlan:
             estimate_us=d["estimate_us"],
             comm_stats=dict(d["comm_stats"]),
             program=program, executor=executor)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s))
 
 
 @dataclasses.dataclass(eq=False, repr=False)
@@ -216,6 +259,28 @@ class BucketedPlan:
     replays one of a handful of frozen plans. ``hits`` counts dispatches
     per bucket (incremented at trace time: one count per traced step,
     the compile-side analogue of the plan cache's hit counter).
+
+    What a *bucket* counts, and where padding goes, depends on the
+    family's padding strategy (``pad_strategy``, see ``_BUCKET_PAD``):
+
+    * ``"rows"`` / ``"tiled"`` (row-preserving): buckets count payload
+      rows; pad the tail, slice the output tail (rows) or each per-rank
+      output block (tiled all_gather).
+    * ``"blocks"`` (row-redistributing: all_to_all, reduce_scatter):
+      the payload is ``(n * rows, cols)`` — n per-rank row blocks —
+      and buckets count rows PER BLOCK. Each block pads independently
+      to the bucket (keeping block boundaries aligned with the routing)
+      and the padding is sliced out of every received block
+      (all_to_all) or off the reduced output tail (reduce_scatter).
+      For MoE expert parallelism the bucket is the per-rank token
+      capacity of the dispatch/combine all_to_all.
+
+    Example — an MoE dispatch all_to_all bucketed over capacities::
+
+        bp = comm.plan_for("all_to_all", (n * cap, d_model), jnp.float32,
+                           buckets=(8, 16, 32))     # per-rank capacities
+        recv = bp(dispatch_buffer)    # pads each block to the bucket,
+                                      # replays that bucket's plan
     """
 
     collective: str
@@ -223,13 +288,15 @@ class BucketedPlan:
     n: int
     cols: int
     dtype: str
-    buckets: Tuple[int, ...]             # ascending row counts
+    buckets: Tuple[int, ...]             # ascending row (or block-row) counts
     plans: Dict[int, ExecutionPlan]      # bucket rows -> plan
     hits: Dict[int, int]
+    pad_strategy: str = "rows"           # 'rows' | 'tiled' | 'blocks'
 
     # -- dispatch ----------------------------------------------------------
     def bucket_for(self, rows: int) -> int:
-        """Smallest bucket that fits ``rows``."""
+        """Smallest bucket that fits ``rows`` (payload rows for the
+        row-preserving strategies, per-rank block rows for 'blocks')."""
         for b in self.buckets:
             if rows <= b:
                 return b
@@ -238,11 +305,21 @@ class BucketedPlan:
             f"of {self!r}")
 
     def plan_for_rows(self, rows: int) -> ExecutionPlan:
+        """The frozen :class:`ExecutionPlan` that would serve a payload
+        of ``rows`` rows (per-block rows under the 'blocks' strategy) —
+        the bucket's plan, without executing it. Use it to inspect the
+        cost card a given occupancy replays::
+
+            bp.plan_for_rows(3).cost_card()   # the 4-bucket's card
+        """
         return self.plans[self.bucket_for(rows)]
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        """Execute on a local shard inside shard_map: pad to the bucket,
-        replay its plan, slice back to the caller's rows."""
+        """Execute on a local shard inside shard_map: pad to the bucket
+        (per the family's padding strategy), replay its plan, slice the
+        result back to the caller's rows."""
+        if self.pad_strategy == "blocks":
+            return self._call_blocks(x)
         rows = int(x.shape[0])
         b = self.bucket_for(rows)
         self.hits[b] += 1
@@ -250,11 +327,38 @@ class BucketedPlan:
         if rows == b:
             return plan(x)
         out = plan(jnp.pad(x, ((0, b - rows), (0, 0))))
-        if self.collective == "all_gather":
+        if self.pad_strategy == "tiled":
             # tiled output: slice the padding out of every rank's block
             return out.reshape(self.n, b, -1)[:, :rows].reshape(
                 self.n * rows, out.shape[1])
         return out[:rows]
+
+    def _call_blocks(self, x: jax.Array) -> jax.Array:
+        """Dispatch for the row-redistributing families: ``x`` is
+        ``(n * rows, cols)``; pad each of the n per-rank blocks to the
+        bucket so the block layout the algorithm routes on is
+        preserved, then slice the padding back out of the result."""
+        total, cols = int(x.shape[0]), int(x.shape[1])
+        if total % self.n != 0:
+            raise ValueError(
+                f"{self.collective} payload rows={total} not divisible "
+                f"by the {self.n} per-rank blocks of {self!r}")
+        rows = total // self.n
+        b = self.bucket_for(rows)
+        self.hits[b] += 1
+        plan = self.plans[b]
+        if rows == b:
+            return plan(x)
+        xp = jnp.pad(x.reshape(self.n, rows, cols),
+                     ((0, 0), (0, b - rows), (0, 0)))
+        out = plan(xp.reshape(self.n * b, cols))
+        if self.collective == "reduce_scatter":
+            # (b, cols) reduced block: padded rows summed zeros, slice off
+            return out[:rows]
+        # all_to_all: (n*b, cols) — slice the padding out of every
+        # received block
+        return out.reshape(self.n, b, cols)[:, :rows].reshape(
+            self.n * rows, cols)
 
     # -- inspection --------------------------------------------------------
     def cost_cards(self) -> Dict[int, dict]:
@@ -264,12 +368,57 @@ class BucketedPlan:
     def report(self) -> dict:
         """Cost cards + dispatch hit counts — the serving-side view."""
         return dict(collective=self.collective, buckets=list(self.buckets),
+                    pad_strategy=self.pad_strategy,
                     cards=self.cost_cards(), hits=dict(self.hits))
 
     def __repr__(self):
-        return (f"BucketedPlan({self.collective} n={self.n} "
-                f"cols={self.cols} dtype={self.dtype} "
+        return (f"BucketedPlan({self.collective}/{self.pad_strategy} "
+                f"n={self.n} cols={self.cols} dtype={self.dtype} "
                 f"buckets={list(self.buckets)} hits={dict(self.hits)})")
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self, **json_kw) -> str:
+        """Serialize the whole bucket family — per-bucket plans included
+        — to JSON, parity with :meth:`ExecutionPlan.to_json` (the
+        MSCCL++ plan-file shape, one file per bucketed collective).
+        Dispatch hit counters are metadata and round-trip too."""
+        json_kw.setdefault("indent", 2)
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(dict(
+            format=PLAN_FORMAT_VERSION, kind="bucketed_plan",
+            collective=self.collective, axis=self.axis, n=self.n,
+            cols=self.cols, dtype=self.dtype,
+            buckets=list(self.buckets), pad_strategy=self.pad_strategy,
+            hits={str(b): h for b, h in self.hits.items()},
+            plans={str(b): self.plans[b].to_dict() for b in self.buckets},
+        ), **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "BucketedPlan":
+        d = json.loads(s)
+        if d.get("format") != PLAN_FORMAT_VERSION:
+            raise ValueError(f"unsupported plan format {d.get('format')!r}")
+        if d.get("kind") != "bucketed_plan":
+            raise ValueError(
+                f"not a bucketed plan payload (kind={d.get('kind')!r}); "
+                f"use ExecutionPlan.from_json for single plans")
+        if d.get("pad_strategy") not in ("rows", "tiled", "blocks"):
+            raise ValueError(
+                f"unknown pad_strategy {d.get('pad_strategy')!r}; "
+                f"expected one of 'rows', 'tiled', 'blocks'")
+        buckets = tuple(int(b) for b in d["buckets"])
+        missing = [b for b in buckets if str(b) not in d["plans"]]
+        if missing:
+            raise ValueError(f"bucketed plan payload missing buckets "
+                             f"{missing} (has {sorted(d['plans'])})")
+        plans = {b: ExecutionPlan.from_dict(d["plans"][str(b)])
+                 for b in buckets}
+        return cls(
+            collective=d["collective"], axis=d["axis"], n=d["n"],
+            cols=d["cols"], dtype=d["dtype"], buckets=buckets,
+            plans=plans,
+            hits={b: int(d.get("hits", {}).get(str(b), 0)) for b in buckets},
+            pad_strategy=d["pad_strategy"])
 
 
 class Communicator:
@@ -366,31 +515,62 @@ class Communicator:
                  n: Optional[int] = None):
         """Bucketed compilation (ROADMAP: continuous batching across
         bucket sizes). With ``buckets=None`` this is :meth:`compile`.
-        With ``buckets=(b1, b2, ...)`` (row counts) it compiles one
-        plan per bucket — through the ordinary plan cache, so a later
+        With ``buckets=(b1, b2, ...)`` it compiles one plan per bucket
+        — through the ordinary plan cache, so a later
         ``plan_for``/``compile`` with an overlapping bucket hits — and
         returns a :class:`BucketedPlan` that pads at dispatch. The
         bucketed artifact itself is cached, so engine init and step
         construction share one hit-counter view.
+
+        What buckets count follows the family's padding strategy
+        (``_BUCKET_PAD``; see :class:`BucketedPlan`):
+
+        * row-preserving families (all_reduce / broadcast / all_gather)
+          — buckets are payload row counts and ``shape`` is the largest
+          payload the family must serve::
+
+              bp = comm.plan_for("all_reduce", (8, d_model), jnp.float32,
+                                 buckets=(2, 4, 8))
+              bp(x)    # x: (rows<=8, d_model) — pads to the bucket
+
+        * row-redistributing families (all_to_all / reduce_scatter) —
+          ``shape`` is the full ``(n * rows, cols)`` payload (n per-rank
+          row blocks) and buckets count rows PER BLOCK (for MoE expert
+          parallelism: the per-rank token capacity)::
+
+              bp = comm.plan_for("all_to_all", (n * cap, d), jnp.float32,
+                                 buckets=(8, 16, cap))
+              recv = bp(dispatch)   # dispatch: (n*c, d), c <= cap —
+                                    # each block pads to the bucket
         """
         if buckets is None:
             return self.compile(collective, shape, dtype, algo=algo,
                                 backend=backend, opt_level=opt_level,
                                 root=root, link=link, n=n)
-        if collective not in _BUCKETABLE:
+        strategy = _BUCKET_PAD.get(collective)
+        if strategy is None:
             raise ValueError(
-                f"bucketed compilation supports {sorted(_BUCKETABLE)}, "
-                f"not {collective!r} (its output layout embeds the row "
-                f"distribution, so bucket padding would corrupt it)")
+                f"unknown collective {collective!r}: bucketed compilation "
+                f"pads per family — " +
+                ", ".join(f"{c} ({s})" for c, s in sorted(_BUCKET_PAD.items())))
         rows, cols = int(shape[0]), int(shape[1])
         bs = tuple(sorted({int(b) for b in buckets}))
         if not bs or bs[0] <= 0:
             raise ValueError(f"buckets must be positive row counts: {buckets}")
+        backend_r = backend or self.backend or default_backend()
+        nn = self._axis_size(n)
+        if strategy == "blocks":
+            # shape is the full (n * block_rows, cols) payload; buckets
+            # count rows per per-rank block
+            if rows % nn != 0:
+                raise ValueError(
+                    f"{collective} rows={rows} not divisible into the "
+                    f"{nn} per-rank blocks its '{strategy}' padding "
+                    f"strategy buckets over")
+            rows //= nn
         if rows > bs[-1]:
             raise ValueError(
                 f"shape rows={rows} exceed the largest bucket {bs[-1]}")
-        backend_r = backend or self.backend or default_backend()
-        nn = self._axis_size(n)
         dtype_name = np.dtype(dtype).name
         level_req = self.opt_level if opt_level is None else opt_level
         level_req = passes.DEFAULT_OPT_LEVEL if level_req is None else level_req
@@ -401,8 +581,9 @@ class Communicator:
         if cached is not None:
             self.stats["hits"] += 1
             return cached
+        rows_for = (lambda b: nn * b) if strategy == "blocks" else (lambda b: b)
         plans = {
-            b: self.compile(collective, (b, cols), dtype, algo=algo,
+            b: self.compile(collective, (rows_for(b), cols), dtype, algo=algo,
                             backend=backend, opt_level=opt_level, root=root,
                             link=link, n=nn)
             for b in bs
@@ -410,7 +591,7 @@ class Communicator:
         bucketed = BucketedPlan(
             collective=collective, axis=self.axis, n=nn, cols=cols,
             dtype=dtype_name, buckets=bs, plans=plans,
-            hits={b: 0 for b in bs})
+            hits={b: 0 for b in bs}, pad_strategy=strategy)
         self._bucketed[key] = bucketed
         return bucketed
 

@@ -12,10 +12,18 @@ axis. Capacity-factor semantics: per (device, expert) at most
 ``capacity`` tokens; overflow drops (standard Switch-style routing) —
 exactness vs the dense path holds whenever capacity is not exceeded,
 which the test pins.
+
+Plan replay (paper §5.2, the explicit decode hot path): both the
+dispatch and the combine all_to_all move an ``(e_total * capacity, d)``
+buffer — the same shape — so ONE init-compiled plan serves both
+directions of every MoE layer of every decode step. Pass ``plan=`` (a
+:class:`~repro.core.comm.BucketedPlan` compiled over capacity buckets,
+or a plain :class:`~repro.core.comm.ExecutionPlan`) to route them
+through it; with ``plan=None`` the dispatch falls back to
+``comm.all_to_all`` (compile-or-hit-cache on first trace).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -24,12 +32,31 @@ import jax.numpy as jnp
 from repro.core import comm as comm_lib
 from repro import compat
 
-__all__ = ["moe_layer_ep"]
+__all__ = ["moe_layer_ep", "ep_capacity"]
 
 
-def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
+def ep_capacity(n_tok: int, top_k: int, e_total: int,
+                capacity_factor: Optional[float] = None) -> int:
+    """Per-(device, expert) token capacity of the EP dispatch buffer.
+
+    One formula shared by the layer (:func:`moe_layer_ep`) and the plan
+    compiler (:func:`repro.distributed.step.compile_decode_plans`), so
+    the capacity a decode step dispatches with is exactly a capacity the
+    engine compiled a bucket for. ``capacity_factor=None`` means
+    LOSSLESS: capacity ``n_tok * top_k`` admits the worst case (every
+    assignment routed to one expert), so no token is ever dropped —
+    required for the explicit decode path's bit-equivalence with the
+    dense oracle."""
+    if capacity_factor is None:
+        return n_tok * top_k
+    return int(capacity_factor * n_tok * top_k / e_total) + 1
+
+
+def moe_layer_ep(p, x, cfg, *, axis: str,
+                 capacity_factor: Optional[float] = 2.0,
                  backend: Optional[str] = None,
-                 comm: Optional[comm_lib.Communicator] = None):
+                 comm: Optional[comm_lib.Communicator] = None,
+                 plan=None):
     """Sparse expert-parallel MoE. Call INSIDE shard_map with the expert
     weights sharded on ``axis`` (leading expert dim) and ``x`` the local
     token shard (b, s, d).
@@ -37,9 +64,19 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     p["w_gate"|"w_up"|"w_down"]: (e_local, d, f) / (e_local, f, d);
     p["router"]: (d, e_total) replicated.
 
+    ``capacity_factor``: Switch-style per-expert capacity multiplier;
+    ``None`` means lossless (see :func:`ep_capacity`).
+
     ``comm``: the Communicator carrying the expert axis's all_to_all
     plans (compiled once, replayed every layer/step); defaults to the
     process-default communicator for ``axis``.
+
+    ``plan``: a precompiled all_to_all plan (``BucketedPlan`` over
+    capacity buckets or plain ``ExecutionPlan``) replayed for BOTH the
+    dispatch and the inverse combine — zero planning work inside traced
+    code, the §5.2 deployment shape. The serve engine compiles it at
+    init (``decode_plans["moe_alltoall"]``) and hands it down through
+    :class:`~repro.distributed.step.TPDecodeComms`.
     """
     comm = comm if comm is not None else comm_lib.default_communicator(axis)
     b, s, d = x.shape
@@ -49,7 +86,7 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     k = cfg.moe.top_k
     tokens = x.reshape(b * s, d)
     n_tok = b * s
-    capacity = int(capacity_factor * n_tok * k / e_total) + 1
+    capacity = ep_capacity(n_tok, k, e_total, capacity_factor)
 
     router = (tokens @ p["router"]).astype(jnp.float32)     # (T, E)
     weights, idx = jax.lax.top_k(router, k)                  # (T, k)
@@ -72,9 +109,13 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     dispatch = jnp.zeros((e_total * capacity + 1, d), x.dtype)
     dispatch = dispatch.at[slot].set(tokens[flat_tok[order]])[:-1]
 
+    def a2a(buf):
+        if plan is not None:
+            return plan(buf)
+        return comm.all_to_all(buf, backend=backend)
+
     # ---- all_to_all: expert-major blocks -> owning devices -------------
-    recv = comm.all_to_all(
-        dispatch.reshape(e_total * capacity, d), backend=backend)
+    recv = a2a(dispatch.reshape(e_total * capacity, d))
     # recv: for my e_local experts, ep blocks of (e_local·capacity) rows
     recv = recv.reshape(ep, e_local, capacity, d)
 
@@ -85,8 +126,7 @@ def moe_layer_ep(p, x, cfg, *, axis: str, capacity_factor: float = 2.0,
     out = jnp.einsum("necf,efd->necd", act, p["w_down"])
 
     # ---- combine: inverse all_to_all + weighted scatter-add -------------
-    back = comm.all_to_all(
-        out.reshape(ep * e_local * capacity, d), backend=backend)
+    back = a2a(out.reshape(ep * e_local * capacity, d))
     back = back.reshape(e_total * capacity, d)
     back = jnp.concatenate([back, jnp.zeros((1, d), x.dtype)], axis=0)
     gathered = back[slot]                                    # (T·k, d)

@@ -248,38 +248,54 @@ def strip_axis(specs, axis: str):
 
 def explicit_decode_supported(cfg: ModelConfig, mesh: Mesh,
                               ax: MeshAxes = MeshAxes()) -> tuple[bool, str]:
-    """Can the explicit-TP decode step (shard_map MANUAL over ``model``,
-    per-layer plan-replay AllReduce) run this config on this mesh?
+    """Can the explicit decode step (shard_map MANUAL over ``model``,
+    per-layer plan-replay collectives) run this config on this mesh?
 
-    The manual body hand-writes the TP math, so it needs the clean
-    tensor-parallel factorization: query/output heads sharded over the
-    axis, MLP hidden dim sharded, KV projections replicated (the cache
-    keeps full KV heads). Anything else falls back to auto/GSPMD."""
+    The manual body hand-writes the parallel math, so it needs a clean
+    factorization over the model axis. Two families qualify:
+
+    * ``dense`` — tensor parallelism: query/output heads sharded over
+      the axis, MLP hidden dim sharded, KV projections replicated (the
+      cache keeps full KV heads).
+    * ``moe``   — expert parallelism on the same axis: attention is TP
+      as above, and the experts shard whole across the axis so MoE
+      dispatch/combine run through the init-compiled capacity-bucketed
+      all_to_all plans (``d_ff`` divisibility is irrelevant — experts
+      never split).
+
+    Anything else falls back to auto/GSPMD."""
     from repro.models.blocks import padded_heads
 
     m = ax.model
     tp = int(mesh.shape.get(m, 1)) if m in mesh.shape else 1
     if tp <= 1:
         return False, "no TP axis of size > 1: nothing to make explicit"
-    if cfg.family != "dense":
-        return False, (f"family {cfg.family!r} not supported "
-                       "(explicit-TP decode covers dense attention+MLP)")
+    if cfg.family not in ("dense", "moe"):
+        return False, (f"family {cfg.family!r} not supported (explicit "
+                       "decode covers dense TP and MoE expert parallelism)")
     nh, _ = padded_heads(cfg)
     if nh % tp != 0:
         return False, f"attention heads {nh} not divisible by TP={tp}"
-    if cfg.d_ff % tp != 0:
+    if cfg.family == "moe":
+        e = cfg.moe.num_experts
+        if e % tp != 0:
+            return False, (f"experts {e} not divisible by EP={tp} "
+                           "(TP-in-expert has no explicit path)")
+    elif cfg.d_ff % tp != 0:
         return False, f"d_ff {cfg.d_ff} not divisible by TP={tp}"
     return True, ""
 
 
 def explicit_decode_pspecs(cfg: ModelConfig, mesh: Mesh,
                            ax: MeshAxes = MeshAxes()) -> dict:
-    """Param specs for the explicit-TP decode step: `param_pspecs` with
+    """Param specs for the explicit decode step: `param_pspecs` with
     the KV projections forced replicated (every rank computes the full
     new K/V token, so the TP-replicated cache stays consistent without
     a gather). Query/output heads and the MLP hidden dim keep their TP
     sharding — their partial sums are what the per-layer plan-replay
-    AllReduce completes."""
+    AllReduce completes. MoE layers keep the expert-parallel layout
+    (experts whole, sharded across the axis; router replicated) —
+    dispatch/combine go through the bucketed all_to_all plans."""
     ok, why = explicit_decode_supported(cfg, mesh, ax)
     if not ok:
         raise ValueError(f"explicit-TP decode unsupported here: {why}")

@@ -236,7 +236,13 @@ def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
       counts so continuous batching replays a handful of plans instead
       of compiling per distinct shape;
     * ``logits_allgather`` — the final vocab-sharded logits gather
-      (only when the vocab divides the TP axis).
+      (only when the vocab divides the TP axis);
+    * ``moe_alltoall`` — MoE family with experts divisible by the axis:
+      the expert-parallel dispatch/combine all_to_all, capacity-bucketed
+      (one plan per per-rank capacity derived from each slot bucket via
+      :func:`~repro.distributed.moe_parallel.ep_capacity`). One plan
+      family serves BOTH directions of every MoE layer — dispatch and
+      combine move the same ``(e_total * capacity, d_model)`` buffer.
     """
     buckets = tuple(buckets) if buckets else slot_buckets(batch_local)
     plans = {"layer_allreduce": comm.plan_for(
@@ -246,11 +252,22 @@ def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
         plans["logits_allgather"] = comm.plan_for(
             "all_gather", (batch_local, cfg.vocab // tp), "float32",
             buckets=buckets)
+    if cfg.family == "moe" and cfg.moe.num_experts % tp == 0:
+        from repro.distributed.moe_parallel import ep_capacity
+
+        e_total = cfg.moe.num_experts
+        e_local = e_total // tp
+        caps = tuple(sorted({
+            e_local * ep_capacity(b, cfg.moe.top_k, e_total)
+            for b in buckets}))
+        plans["moe_alltoall"] = comm.plan_for(
+            "all_to_all", (tp * caps[-1], cfg.d_model), cfg.dtype,
+            buckets=caps)
     return plans
 
 
 class TPDecodeComms:
-    """The per-layer TP communication hook the explicit decode step
+    """The per-layer TP/EP communication hook the explicit decode step
     hands to ``transformer.decode_step`` (see its docstring).
 
     Every method is pure plan replay inside traced code: the
@@ -258,20 +275,36 @@ class TPDecodeComms:
     step-build time, so tracing the decode step does zero selection,
     zero pass-pipeline work, and zero executor lowering — the MSCCL++
     deployment contract, now on the token hot path.
+
+    For the MoE family the same axis doubles as the expert-parallel
+    axis: ``moe_plan`` is the capacity-bucketed dispatch/combine
+    all_to_all and :meth:`moe` runs the sparse EP layer through it.
     """
 
     def __init__(self, cfg: ModelConfig, axis: str, tp: int, *,
-                 hidden_plan, logits_plan=None):
+                 hidden_plan, logits_plan=None, moe_plan=None):
         self.cfg = cfg
         self.axis = axis
         self.tp = tp
         self.hidden_plan = hidden_plan      # bucketed all_reduce (b, d_model)
         self.logits_plan = logits_plan      # bucketed all_gather or None
+        self.moe_plan = moe_plan            # bucketed EP all_to_all or None
         self.vocab_sharded = logits_plan is not None
 
     def head_offset(self, nh_local: int):
         """Global index of this shard's first query head."""
         return jax.lax.axis_index(self.axis) * nh_local
+
+    def moe(self, lp, x):
+        """Expert-parallel MoE layer on a (b, s, d_model) hidden state:
+        dispatch and combine are replays of the init-compiled
+        capacity-bucketed all_to_all plan. Lossless capacity
+        (``capacity_factor=None``) so the result matches the dense
+        oracle exactly — no token ever drops on the decode hot path."""
+        from repro.distributed.moe_parallel import moe_layer_ep
+
+        return moe_layer_ep(lp, x, self.cfg, axis=self.axis,
+                            capacity_factor=None, plan=self.moe_plan)
 
     def hidden(self, x):
         """AllReduce a (b, s, d_model) hidden-state partial over TP."""
@@ -322,7 +355,10 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
       AllReduces (attention out-proj, MLP down-proj) + the vocab-sharded
       embedding/logits collectives are replays of init-compiled
       :class:`~repro.core.comm.ExecutionPlan` s (bucketed over
-      active-slot counts) — the paper's §5.2 decode hot path. The KV
+      active-slot counts) — the paper's §5.2 decode hot path. For the
+      MoE family the same axis carries expert parallelism: the per-layer
+      dispatch/combine run through the init-compiled capacity-bucketed
+      all_to_all plan (``TPDecodeComms.moe``). The KV
       cache is kept whole along ``model`` (heads stay full per device;
       only weights shard), so attention math is local; the DP axes are
       included in the manual set by default (``manual_dp=True``), which
@@ -398,7 +434,8 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
     plans = compile_decode_plans(cfg, comm, batch_local=b_local, tp=tp)
     comms = TPDecodeComms(cfg, ax.model, tp,
                           hidden_plan=plans["layer_allreduce"],
-                          logits_plan=plans.get("logits_allgather"))
+                          logits_plan=plans.get("logits_allgather"),
+                          moe_plan=plans.get("moe_alltoall"))
     logit_spec = P(d if batch_sharded else None, None)
 
     def local_step(params, cache, tokens, pos):

@@ -216,7 +216,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
     """tokens: (b,) int32 (or (b, d) embeddings); pos: scalar int32.
     Returns (logits (b, vocab) f32, new cache).
 
-    ``comms`` — the per-layer TP communication hook of the explicit
+    ``comms`` — the per-layer TP/EP communication hook of the explicit
     decode path (``repro.distributed.step.TPDecodeComms``). When given,
     this function runs INSIDE a shard_map that is manual over the TP
     axis: parameters arrive as TP shards, the two per-layer hidden-state
@@ -224,13 +224,18 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
     ``comms.hidden`` (a replay of the engine's init-compiled AllReduce
     plan, not a GSPMD-inserted psum), the embedding lookup and final
     logits go through ``comms.embed`` / ``comms.logits`` (vocab-sharded
-    tables), and attention receives its shard's global head offset.
-    ``comms=None`` is the auto/GSPMD path, unchanged.
+    tables), and attention receives its shard's global head offset. For
+    the MoE family the per-layer expert block runs ``comms.moe`` —
+    expert-parallel dispatch/combine through the init-compiled
+    capacity-bucketed all_to_all plan — instead of the dense-einsum
+    oracle. ``comms=None`` is the auto/GSPMD path, unchanged.
     """
-    if comms is not None and (cfg.family != "dense" or "k_scale" in cache):
+    if comms is not None and (
+            cfg.family not in ("dense", "moe") or "k_scale" in cache
+            or (cfg.family == "moe" and comms.moe_plan is None)):
         raise NotImplementedError(
-            "explicit-TP decode supports the dense family with an "
-            "unquantized KV cache")
+            "explicit decode supports the dense and MoE (with a compiled "
+            "moe_alltoall plan) families with an unquantized KV cache")
     if not jnp.issubdtype(tokens.dtype, jnp.integer):
         x = tokens.astype(cfg.jdtype)[:, None]          # embedded input
     elif comms is not None:
@@ -278,7 +283,12 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
             x = x + att
             h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
             if cfg.family == "moe":
-                x = x + blocks.moe_layer(lp["moe"], h, cfg)
+                if comms is not None:
+                    # expert-parallel dispatch/combine: both all_to_alls
+                    # replay the init-compiled capacity-bucketed plan
+                    x = x + comms.moe(lp["moe"], h)
+                else:
+                    x = x + blocks.moe_layer(lp["moe"], h, cfg)
             else:
                 mlp_out = blocks.mlp_swiglu(lp["mlp"], h)
                 if comms is not None:

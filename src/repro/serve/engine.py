@@ -103,9 +103,15 @@ class Engine:
 
     def plan_report(self) -> dict:
         """Per-bucket cost cards + dispatch hit counts of the decode-step
-        plans, plus the per-token predicted communication time (2
-        AllReduces/layer + embedding gather-reduce + final logits
-        gather, at full slot occupancy)."""
+        plans, plus the per-token predicted communication time at full
+        slot occupancy: per layer, 2 AllReduces (dense: attention
+        out-proj + MLP down-proj) or 1 AllReduce + 2 EP all_to_alls
+        (MoE: out-proj + dispatch/combine), plus the embedding
+        gather-reduce and final logits gather."""
+        def top_plan(p):
+            return p.plans[p.buckets[-1]] if isinstance(
+                p, comm_lib.BucketedPlan) else p
+
         cards = {}
         per_tok = 0.0
         for name, p in self.decode_plans.items():
@@ -115,16 +121,22 @@ class Engine:
                 cards[name] = p.cost_card()
         ar = self.decode_plans.get("layer_allreduce")
         if ar is not None:
-            top = ar.plans[ar.buckets[-1]] if isinstance(
-                ar, comm_lib.BucketedPlan) else ar
-            per_tok += 2 * self.cfg.n_layers * top.estimate_us
+            # dense layers replay it twice (attention out-proj + MLP
+            # down-proj); MoE layers once — the expert block's combine
+            # happens in the all_to_all pair, not an AllReduce
+            ar_per_layer = 1 if self.cfg.family == "moe" else 2
+            per_tok += ar_per_layer * self.cfg.n_layers * \
+                top_plan(ar).estimate_us
             if "logits_allgather" in self.decode_plans:
-                per_tok += top.estimate_us       # vocab-sharded embed lookup
+                # vocab-sharded embed lookup reuses the AllReduce plan
+                per_tok += top_plan(ar).estimate_us
         ag = self.decode_plans.get("logits_allgather")
         if ag is not None:
-            top = ag.plans[ag.buckets[-1]] if isinstance(
-                ag, comm_lib.BucketedPlan) else ag
-            per_tok += top.estimate_us
+            per_tok += top_plan(ag).estimate_us
+        a2a = self.decode_plans.get("moe_alltoall")
+        if a2a is not None:
+            # EP dispatch + combine all_to_all per MoE layer
+            per_tok += 2 * self.cfg.n_layers * top_plan(a2a).estimate_us
         return dict(mode=self.mode, plans=cards,
                     predicted_comm_us_per_token=round(per_tok, 2),
                     communicator=repr(self.comm))

@@ -158,6 +158,78 @@ def test_plan_json_roundtrip_bitwise(mesh8):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_bucketed_plan_json_roundtrip(mesh8):
+    """BucketedPlan serializes like ExecutionPlan: per-bucket plans and
+    metadata (buckets, padding strategy, hit counters) round-trip, and
+    the reloaded family executes bit-identically at every occupancy."""
+    from repro.core.comm import BucketedPlan
+
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("all_reduce", (8, 16), jnp.float32, buckets=(2, 4, 8))
+    x = jnp.asarray(np.random.RandomState(7).randn(N, 3, 16), jnp.float32)
+    y1 = _shard_run(mesh8, lambda xs: bp(xs[0])[None], x)
+
+    s = bp.to_json()
+    bp2 = BucketedPlan.from_json(s)
+    # stable through a round trip (hit counters included: bp dispatched
+    # once above, and the re-serialized copy must carry that state)
+    assert bp2.to_json() == s
+    assert (bp2.buckets, bp2.pad_strategy) == (bp.buckets, bp.pad_strategy)
+    assert bp2.hits == bp.hits
+    assert {b: p.algo for b, p in bp2.plans.items()} == \
+        {b: p.algo for b, p in bp.plans.items()}
+    y2 = _shard_run(mesh8, lambda xs: bp2(xs[0])[None], x)
+    assert jnp.array_equal(y1, y2)
+
+
+def test_bucketed_alltoall_plan_json_roundtrip(mesh8):
+    """The new row-redistributing buckets serialize too: an all_to_all
+    family under the 'blocks' strategy reloads and replays exactly."""
+    from repro.core.comm import BucketedPlan
+
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("all_to_all", (N * 4, 8), jnp.float32, buckets=(2, 4))
+    bp2 = BucketedPlan.from_json(bp.to_json())
+    assert bp2.pad_strategy == "blocks"
+    assert bp2.plans[4].shape == (N * 4, 8)      # full (n*block, cols) shape
+    x = jnp.asarray(np.random.RandomState(8).randn(N, N * 3, 8), jnp.float32)
+    y1 = _shard_run(mesh8, lambda xs: bp(xs[0])[None], x)
+    y2 = _shard_run(mesh8, lambda xs: bp2(xs[0])[None], x)
+    assert jnp.array_equal(y1, y2)
+    want = np.swapaxes(np.asarray(x).reshape(N, N, 3, 8), 0, 1)
+    np.testing.assert_allclose(np.asarray(y1).reshape(N, N, 3, 8), want,
+                               rtol=1e-6)
+
+
+def test_bucketed_plan_json_error_paths():
+    """from_json rejects wrong formats, wrong kinds, and truncated
+    payloads instead of mis-deserializing."""
+    from repro.core.comm import BucketedPlan
+
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("all_reduce", (4, 8), jnp.float32, buckets=(2, 4))
+    d = json.loads(bp.to_json())
+
+    bad = dict(d, format=99)
+    with pytest.raises(ValueError, match="format"):
+        BucketedPlan.from_json(json.dumps(bad))
+    # a single-plan payload is not a bucket family (and vice versa)
+    single = comm.compile("all_reduce", (4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="kind"):
+        BucketedPlan.from_json(single.to_json())
+    with pytest.raises(ValueError, match="BucketedPlan.from_json"):
+        ExecutionPlan.from_json(bp.to_json())
+    # missing per-bucket plan
+    truncated = dict(d, plans={k: v for k, v in d["plans"].items()
+                               if k != "2"})
+    with pytest.raises(ValueError, match="missing buckets"):
+        BucketedPlan.from_json(json.dumps(truncated))
+    # corrupted padding strategy must not silently fall back to 'rows'
+    skewed = dict(d, pad_strategy="Blocks")
+    with pytest.raises(ValueError, match="pad_strategy"):
+        BucketedPlan.from_json(json.dumps(skewed))
+
+
 def test_plan_shape_dtype_guards():
     comm = Communicator("x", n=N, backend="xla")
     plan = comm.compile("all_reduce", (16, 32), jnp.float32)

@@ -1,7 +1,9 @@
-"""Explicit-TP decode hot path (paper §5.2): auto-vs-explicit greedy
-bit-equivalence, plan replay (compile counters flat across decode
-calls), bucketed plan compilation + pad-at-dispatch correctness, the
-partial-manual shard_map guard, and graceful auto fallback."""
+"""Explicit decode hot path (paper §5.2): auto-vs-explicit greedy
+bit-equivalence (dense TP and MoE expert parallelism), plan replay
+(compile counters flat across decode calls), bucketed plan compilation
++ pad-at-dispatch correctness for every padding strategy (rows / tiled
+/ blocks), the partial-manual shard_map guard, and graceful auto
+fallback."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -74,6 +76,83 @@ def test_explicit_decode_replays_not_recompiles():
     assert isinstance(ar, BucketedPlan)
     # batch=8, dp=2 -> 4 local rows: decode dispatches hit the 4-bucket
     assert ar.hits[ar.bucket_for(4)] > 0
+
+
+# ---------------------------------------------------------------------------
+# explicit-EP MoE decode (the tentpole: bucketed all_to_all on the hot path)
+# ---------------------------------------------------------------------------
+def _moe_cfg(arch="mixtral-8x22b"):
+    return configs.reduced(configs.get_config(arch))
+
+
+@pytest.mark.parametrize("dp,ep,arch", [
+    (1, 2, "mixtral-8x22b"),
+    (2, 4, "mixtral-8x22b"),
+    (2, 2, "phi3.5-moe-42b-a6.6b"),
+    (1, 4, "phi3.5-moe-42b-a6.6b"),
+])
+def test_moe_decode_auto_vs_explicit_bit_equal(dp, ep, arch):
+    """MoE greedy tokens identical over >= 16 steps at EP in {2, 4}:
+    the explicit step's per-layer dispatch/combine replay the
+    init-compiled capacity-bucketed all_to_all plan."""
+    mesh = _mesh((dp, ep), ("data", "model"))
+    cfg = _moe_cfg(arch)
+    params = _params(cfg, mesh)
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (4, 4)).astype(np.int32)
+
+    toks = {}
+    for mode in ("auto", "explicit"):
+        eng = Engine(cfg, params, mesh, ServeConfig(batch=4, max_kv=64),
+                     mode=mode)
+        assert eng.mode == mode          # no silent fallback
+        logits = eng.prefill(prompts)
+        toks[mode] = eng.decode(logits, num_tokens=16)
+    np.testing.assert_array_equal(toks["auto"], toks["explicit"])
+
+
+def test_moe_explicit_replays_bucketed_alltoall():
+    """Compile counters stay flat across MoE decode calls and the
+    moe_alltoall per-bucket hit counters advance (dispatch + combine
+    per layer trace)."""
+    mesh = _mesh((2, 2), ("data", "model"))
+    cfg = _moe_cfg()
+    eng = Engine(cfg, _params(cfg, mesh), mesh,
+                 ServeConfig(batch=4, max_kv=32), mode="explicit")
+    assert eng.mode == "explicit"
+    a2a = eng.decode_plans["moe_alltoall"]
+    assert isinstance(a2a, BucketedPlan)
+    assert a2a.pad_strategy == "blocks"
+    # bucket ladder: per-rank rows e_local * capacity(slot bucket),
+    # lossless capacity = n_tok * top_k (see ep_capacity)
+    e_local = cfg.moe.num_experts // 2
+    assert a2a.buckets[-1] == e_local * 2 * cfg.moe.top_k  # b_local=2
+    compiles_at_init = eng.comm.stats["compiles"]
+    assert compiles_at_init > 0
+    prompts = np.random.RandomState(1).randint(
+        0, cfg.vocab, (4, 3)).astype(np.int32)
+    eng.decode(eng.prefill(prompts), num_tokens=2)
+    assert eng.comm.stats["compiles"] == compiles_at_init
+    # the decode trace dispatched the full-capacity bucket (twice per
+    # layer group: dispatch + combine)
+    assert a2a.hits[a2a.buckets[-1]] > 0
+    rep = eng.plan_report()
+    assert rep["plans"]["moe_alltoall"]["pad_strategy"] == "blocks"
+    assert rep["predicted_comm_us_per_token"] > 0
+
+
+def test_moe_explicit_rejects_without_plan():
+    """decode_step with comms but no compiled moe_alltoall plan fails
+    loudly rather than silently recompiling inside the trace."""
+    from repro.distributed.step import TPDecodeComms
+    from repro.models import transformer as tf
+
+    cfg = _moe_cfg()
+    comms = TPDecodeComms(cfg, "model", 2, hidden_plan=None, moe_plan=None)
+    cache = tf.init_cache(cfg, 2, 8)
+    with pytest.raises(NotImplementedError, match="moe_alltoall"):
+        tf.decode_step({}, cfg, cache, jnp.zeros((2,), jnp.int32),
+                       jnp.int32(0), comms=comms)
 
 
 def test_make_serve_step_explicit_standalone():
@@ -159,13 +238,54 @@ def test_bucketed_plan_cache_and_validation(mesh4):
     assert comm.stats["compiles"] == compiles
     with pytest.raises(ValueError, match="exceeds the largest bucket"):
         bp1.bucket_for(5)
-    with pytest.raises(ValueError, match="bucketed compilation supports"):
-        comm.plan_for("reduce_scatter", (4, 8), jnp.float32, buckets=(4,))
+    with pytest.raises(ValueError, match="pads per family"):
+        comm.plan_for("gather_scatter", (4, 8), jnp.float32, buckets=(4,))
     with pytest.raises(ValueError, match="exceed the largest bucket"):
         comm.plan_for("all_reduce", (8, 8), jnp.float32, buckets=(2, 4))
+    # blocks strategy: full payload rows must divide into per-rank blocks
+    with pytest.raises(ValueError, match="per-rank blocks"):
+        comm.plan_for("all_to_all", (6, 8), jnp.float32, buckets=(2,))
     # buckets=None degrades to a plain ExecutionPlan
     plan = comm.plan_for("all_reduce", (4, 8), jnp.float32)
     assert not isinstance(plan, BucketedPlan)
+
+
+def test_bucketed_alltoall_pads_per_block(mesh4):
+    """The 'blocks' padding strategy (row-redistributing collectives):
+    buckets count rows PER per-rank block, each block pads
+    independently, and the padding is sliced out of every received
+    block — the MoE capacity-bucket case."""
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("all_to_all", (N * 8, 16), jnp.float32,
+                       buckets=(2, 4, 8))
+    assert bp.pad_strategy == "blocks"
+    assert comm.stats["compiles"] == 3          # one per capacity bucket
+    for rows in (1, 2, 3, 5, 8):
+        x = jnp.asarray(np.random.RandomState(rows).randn(N, N * rows, 16),
+                        jnp.float32)
+        y = _bucket_run(mesh4, lambda xs: bp(xs[0])[None], x)
+        assert y.shape == (N, N * rows, 16)
+        # device d's received block j == device j's sent block d
+        want = np.swapaxes(np.asarray(x).reshape(N, N, rows, 16), 0, 1)
+        np.testing.assert_allclose(
+            np.asarray(y).reshape(N, N, rows, 16), want, rtol=1e-6)
+    assert comm.stats["compiles"] == 3          # bucketed, not per-shape
+    assert bp.hits == {2: 2, 4: 1, 8: 2}
+
+
+def test_bucketed_reduce_scatter_blocks(mesh4):
+    """reduce_scatter under the blocks strategy: padded rows reduce to
+    zeros and slice off the output tail."""
+    comm = Communicator("x", n=N, backend="xla")
+    bp = comm.plan_for("reduce_scatter", (N * 4, 8), jnp.float32,
+                       buckets=(2, 4))
+    for rows in (1, 3, 4):
+        x = jnp.asarray(np.random.RandomState(rows).randn(N, N * rows, 8),
+                        jnp.float32)
+        y = _bucket_run(mesh4, lambda xs: bp(xs[0])[None], x)
+        assert y.shape == (N, rows, 8)
+        want = np.asarray(x).reshape(N, N, rows, 8).sum(axis=0)
+        np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -203,10 +323,10 @@ def test_explicit_partial_manual_runs():
 
 
 def test_explicit_falls_back_gracefully_for_unsupported_family():
-    """A family the manual body cannot shard (MoE) warns and serves via
-    auto instead of failing."""
+    """A family the manual body cannot shard (hybrid attention+SSM)
+    warns and serves via auto instead of failing."""
     mesh = _mesh((2, 4), ("data", "model"))
-    cfg = configs.reduced(configs.get_config("mixtral-8x22b"))
+    cfg = configs.reduced(configs.get_config("hymba-1.5b"))
     params = _params(cfg, mesh)
     with pytest.warns(UserWarning, match="falling back to auto"):
         eng = Engine(cfg, params, mesh, ServeConfig(batch=4, max_kv=32),
@@ -232,6 +352,18 @@ def test_explicit_supported_predicate():
     assert ok
     ok, why = shd.explicit_decode_supported(cfg, _mesh((8,), ("data",)))
     assert not ok and "TP" in why
+    # MoE: supported when experts divide the axis (expert parallelism)...
     moe = configs.reduced(configs.get_config("mixtral-8x22b"))
-    ok, why = shd.explicit_decode_supported(moe, mesh)
+    ok, _ = shd.explicit_decode_supported(moe, mesh)
+    assert ok
+    # ...but TP-in-expert (experts % axis != 0) has no explicit path
+    import dataclasses
+
+    from repro.models.config import MoEConfig
+    moe6 = dataclasses.replace(moe, moe=MoEConfig(num_experts=6, top_k=2))
+    ok, why = shd.explicit_decode_supported(moe6, mesh)
+    assert not ok and "experts" in why
+    # hybrid/rwkv stay auto-only
+    hyb = configs.reduced(configs.get_config("hymba-1.5b"))
+    ok, why = shd.explicit_decode_supported(hyb, mesh)
     assert not ok and "family" in why
