@@ -26,6 +26,16 @@ expert-parallel model decoded both ways, the explicit path replaying
 the capacity-bucketed dispatch/combine all_to_all plan per layer
 (``decode_plans["moe_alltoall"]``) — the paper's §2.1 MoE collective
 on the §5.2 hot path. ``moe_decode_smoke`` is its 2-device smoke.
+
+``hybrid_decode_auto_vs_explicit`` covers the hybrid (attention+SSM)
+family: the SSM branch runs per-shard on its d_inner rows and its
+out-proj partial replays the same per-layer AllReduce plan as the
+attention/MLP partials (3 replays per layer). ``hybrid_decode_smoke``
+is its 2-device smoke. ``int8kv_decode_auto_vs_explicit`` is the int8
+KV cache point: dense decode with a quantized cache both ways — the
+explicit path quantizes/dequantizes against the TP-replicated scale
+entries, so the plan set (and the compile counters) are identical to
+the fp point.
 """
 from __future__ import annotations
 
@@ -90,11 +100,26 @@ def _bench_moe_cfg():
         moe=MoEConfig(num_experts=4, top_k=2))
 
 
-def _run_engine(cfg, params, mesh, mode, *, batch, prompts, tokens):
+def _bench_hybrid_cfg():
+    """hymba-shaped tiny hybrid: parallel attention+SSM heads, sliding
+    window — the SSM inner dim (= d_model) divides the TP axis sizes
+    the bench/smoke meshes use (2, 4)."""
+    from repro.models.config import ModelConfig, SSMConfig
+
+    return ModelConfig(
+        name="hybrid-decode-bench", family="hybrid", window=64,
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=256, vocab=512, max_seq=256, dtype="float32",
+        ssm=SSMConfig(state_dim=16))
+
+
+def _run_engine(cfg, params, mesh, mode, *, batch, prompts, tokens,
+                kv_quant=False):
     from repro.serve.engine import Engine, ServeConfig
 
     eng = Engine(cfg, params, mesh,
-                 ServeConfig(batch=batch, max_kv=128, mode=mode))
+                 ServeConfig(batch=batch, max_kv=128, mode=mode,
+                             kv_quant=kv_quant))
     assert eng.mode == mode, f"requested {mode!r}, engine fell back"
     logits = eng.prefill(prompts)
     compiles0 = eng.comm.stats["compiles"]
@@ -107,7 +132,7 @@ def _run_engine(cfg, params, mesh, mode, *, batch, prompts, tokens):
 
 
 def _compare_modes(cfg, *, mesh_shape, axis_names, batch, prompt_len,
-                   seed, tokens):
+                   seed, tokens, kv_quant=False):
     """Shared scaffolding of every auto-vs-explicit comparison: build
     the mesh, init params, decode the same prompts through both engine
     modes. Returns (toks_auto, toks_explicit, ms_auto, ms_explicit,
@@ -126,10 +151,11 @@ def _compare_modes(cfg, *, mesh_shape, axis_names, batch, prompt_len,
     prompts = np.random.RandomState(seed).randint(
         0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
     toks_a, ms_a, _ = _run_engine(cfg, params, mesh, "auto",
-                                  batch=batch, prompts=prompts, tokens=tokens)
+                                  batch=batch, prompts=prompts,
+                                  tokens=tokens, kv_quant=kv_quant)
     toks_e, ms_e, eng = _run_engine(cfg, params, mesh, "explicit",
                                     batch=batch, prompts=prompts,
-                                    tokens=tokens)
+                                    tokens=tokens, kv_quant=kv_quant)
     return toks_a, toks_e, ms_a, ms_e, eng
 
 
@@ -210,6 +236,85 @@ def moe_decode_smoke(tokens=4) -> dict:
                     "predicted_comm_us_per_token"])
 
 
+def hybrid_decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
+                                   dp=2, tp=4) -> dict:
+    """Measured auto (GSPMD) vs explicit (plan-replay) decode for the
+    hybrid attention+SSM family: the explicit step shards the SSM
+    inner dim over TP (state model-sharded in the cache) and completes
+    the SSM out-proj partial with its own replay of the per-layer
+    AllReduce plan — 3 replays per layer instead of the dense 2.
+    Closes the last ROADMAP family gap alongside int8 KV. Records
+    ms/token both ways and bit-equality of the greedy output."""
+    cfg = _bench_hybrid_cfg()
+    toks_a, toks_e, ms_a, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(dp, tp), axis_names=("data", "model"),
+        batch=batch, prompt_len=4, seed=0, tokens=tokens)
+    rep = eng.plan_report()
+    point = dict(
+        bench="hybrid_decode_auto_vs_explicit", model=cfg.name, dp=dp,
+        tp=tp, batch=batch, tokens=tokens, n_layers=cfg.n_layers,
+        ssm_state_dim=cfg.ssm.state_dim, window=cfg.window,
+        backend=eng.comm.backend or "xla",
+        wall_ms_per_token_auto=round(ms_a, 2),
+        wall_ms_per_token_explicit=round(ms_e, 2),
+        speedup_explicit=round(ms_a / ms_e, 3),
+        tokens_bit_identical=bool((toks_a == toks_e).all()),
+        allreduce_replays_per_layer=3,
+        predicted_comm_us_per_token=rep["predicted_comm_us_per_token"],
+    )
+    if points is not None:
+        points.append(point)
+    return point
+
+
+def int8kv_decode_auto_vs_explicit(points=None, *, batch=4, tokens=16,
+                                   dp=2, tp=4) -> dict:
+    """The int8 KV cache on the explicit hot path: dense decode with a
+    quantized cache through both engine modes. The explicit step
+    quantizes every new token against the TP-replicated scale entries
+    and dequantizes per gathered head — the plan set is identical to
+    the fp point (no scale collective), which the flat compile
+    counters inside ``_run_engine`` assert."""
+    cfg = _bench_cfg()
+    toks_a, toks_e, ms_a, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(dp, tp), axis_names=("data", "model"),
+        batch=batch, prompt_len=4, seed=0, tokens=tokens, kv_quant=True)
+    point = dict(
+        bench="int8kv_decode_auto_vs_explicit", model=cfg.name, dp=dp,
+        tp=tp, batch=batch, tokens=tokens, n_layers=cfg.n_layers,
+        cache_dtype="int8",
+        backend=eng.comm.backend or "xla",
+        wall_ms_per_token_auto=round(ms_a, 2),
+        wall_ms_per_token_explicit=round(ms_e, 2),
+        speedup_explicit=round(ms_a / ms_e, 3),
+        tokens_bit_identical=bool((toks_a == toks_e).all()),
+        predicted_comm_us_per_token=eng.plan_report()[
+            "predicted_comm_us_per_token"],
+    )
+    if points is not None:
+        points.append(point)
+    return point
+
+
+def hybrid_decode_smoke(tokens=4) -> dict:
+    """Seconds-fast 2-device explicit-hybrid smoke (``scripts/check.sh
+    --smoke``): TP=2 model-only mesh, asserts the explicit step decodes
+    the attention+SSM family through plan replay (compile counters
+    flat inside ``_run_engine``) bit-identically to auto."""
+    cfg = _bench_hybrid_cfg()
+    toks_a, toks_e, _, ms_e, eng = _compare_modes(
+        cfg, mesh_shape=(2,), axis_names=("model",),
+        batch=2, prompt_len=3, seed=1, tokens=tokens)
+    assert (toks_a == toks_e).all(), \
+        "explicit hybrid decode diverged from auto"
+    rep = eng.plan_report()
+    return dict(tp=2, tokens=tokens, ms_per_token=round(ms_e, 2),
+                tokens_bit_identical=True,
+                predicted_comm_us_per_token=rep[
+                    "predicted_comm_us_per_token"],
+                hits=rep["plans"]["layer_allreduce"]["hits"])
+
+
 def explicit_decode_smoke(tokens=4) -> dict:
     """Seconds-fast 2-device explicit-decode smoke
     (``scripts/check.sh --smoke``): TP=2 model-only mesh, asserts the
@@ -272,5 +377,23 @@ def main(rows=None):
                  m["wall_ms_per_token_explicit"],
                  f"{m['speedup_explicit']}x",
                  "bit-identical" if m["tokens_bit_identical"]
+                 else "MISMATCH"))
+    # ... the hybrid attention+SSM family (SSM out-proj on the plan path)
+    h = hybrid_decode_auto_vs_explicit()
+    rows.append(("hybrid_decode_auto_vs_explicit",
+                 f"dp{h['dp']}_tp{h['tp']}_bsz{h['batch']}",
+                 h["wall_ms_per_token_auto"],
+                 h["wall_ms_per_token_explicit"],
+                 f"{h['speedup_explicit']}x",
+                 "bit-identical" if h["tokens_bit_identical"]
+                 else "MISMATCH"))
+    # ... and the int8 KV cache point (quantized cache, same plan set)
+    q = int8kv_decode_auto_vs_explicit()
+    rows.append(("int8kv_decode_auto_vs_explicit",
+                 f"dp{q['dp']}_tp{q['tp']}_bsz{q['batch']}",
+                 q["wall_ms_per_token_auto"],
+                 q["wall_ms_per_token_explicit"],
+                 f"{q['speedup_explicit']}x",
+                 "bit-identical" if q["tokens_bit_identical"]
                  else "MISMATCH"))
     return rows

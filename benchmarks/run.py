@@ -57,6 +57,11 @@ def main(argv=None) -> None:
               f"{moe['ms_per_token']}ms/token "
               f"a2a_buckets={moe['buckets']} a2a_hits={moe['hits']} "
               f"— bit-identical to auto OK")
+        hyb = llm_inference.hybrid_decode_smoke()
+        print(f"hybrid_decode_smoke tp={hyb['tp']} "
+              f"{hyb['ms_per_token']}ms/token "
+              f"pred_comm={hyb['predicted_comm_us_per_token']}us/token "
+              f"bucket_hits={hyb['hits']} — bit-identical to auto OK")
         return
     if "--json" in argv:
         from benchmarks import collectives, llm_inference
@@ -66,19 +71,28 @@ def main(argv=None) -> None:
         llm_inference.decode_auto_vs_explicit(payload["points"])
         # ...and the MoE expert-parallel analogue (bucketed all_to_all)
         llm_inference.moe_decode_auto_vs_explicit(payload["points"])
+        # ...the hybrid attention+SSM family (SSM out-proj plan replay)
+        llm_inference.hybrid_decode_auto_vs_explicit(payload["points"])
+        # ...and the int8 KV cache point (quantized cache, same plans)
+        llm_inference.int8kv_decode_auto_vs_explicit(payload["points"])
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
         out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
         geo = payload["geomean_speedup_allpairs"]
-        dec = [p for p in payload["points"]
-               if p["bench"] == "decode_auto_vs_explicit"][0]
-        moe = [p for p in payload["points"]
-               if p["bench"] == "moe_decode_auto_vs_explicit"][0]
+
+        def _pt(name):
+            return [p for p in payload["points"] if p["bench"] == name][0]
+
+        dec = _pt("decode_auto_vs_explicit")
+        moe = _pt("moe_decode_auto_vs_explicit")
+        hyb = _pt("hybrid_decode_auto_vs_explicit")
+        q8 = _pt("int8kv_decode_auto_vs_explicit")
         print(f"wrote {out} ({len(payload['points'])} points, "
               f"allpairs O0->O{payload['opt_default']} geomean "
               f"speedup {geo}x, decode auto->explicit "
-              f"{dec['speedup_explicit']}x, MoE decode auto->explicit "
-              f"{moe['speedup_explicit']}x)")
+              f"{dec['speedup_explicit']}x, MoE {moe['speedup_explicit']}x, "
+              f"hybrid {hyb['speedup_explicit']}x, "
+              f"int8-KV {q8['speedup_explicit']}x)")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

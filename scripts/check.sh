@@ -6,9 +6,10 @@
 #                               # (pytest args pass through)
 #   scripts/check.sh --smoke    # seconds-fast Communicator plan-path
 #                               # bench smoke (compile-once contract)
-#                               # + 2-device explicit-decode and
-#                               # explicit-MoE smokes (plan replay
-#                               # bit-identical to auto)
+#                               # + 2-device explicit-decode,
+#                               # explicit-MoE, and explicit-hybrid
+#                               # smokes (plan replay bit-identical
+#                               # to auto)
 #   scripts/check.sh --docs     # doc smoke only: execute every
 #                               # examples/*.py on the emulated mesh
 #                               # and check the docs pages exist —
@@ -20,7 +21,8 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 run_docs() {
   echo "== doc smoke: docs pages present =="
-  for f in README.md docs/architecture.md docs/plan-lifecycle.md docs/dsl.md; do
+  for f in README.md docs/architecture.md docs/plan-lifecycle.md \
+           docs/dsl.md docs/serving.md docs/tuning.md; do
     [[ -s "$f" ]] || { echo "MISSING: $f" >&2; exit 1; }
   done
   echo "== doc smoke: executing examples/*.py =="

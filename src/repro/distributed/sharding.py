@@ -28,7 +28,8 @@ from repro.models.config import ModelConfig
 
 __all__ = ["MeshAxes", "param_pspecs", "batch_pspec", "shardings_for",
            "cache_pspecs", "logical_rules", "strip_axis",
-           "explicit_decode_supported", "explicit_decode_pspecs"]
+           "explicit_decode_supported", "explicit_decode_pspecs",
+           "explicit_decode_cache_pspecs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,27 +253,35 @@ def explicit_decode_supported(cfg: ModelConfig, mesh: Mesh,
     per-layer plan-replay collectives) run this config on this mesh?
 
     The manual body hand-writes the parallel math, so it needs a clean
-    factorization over the model axis. Two families qualify:
+    factorization over the model axis. Three families qualify:
 
-    * ``dense`` — tensor parallelism: query/output heads sharded over
+    * ``dense``  — tensor parallelism: query/output heads sharded over
       the axis, MLP hidden dim sharded, KV projections replicated (the
-      cache keeps full KV heads).
-    * ``moe``   — expert parallelism on the same axis: attention is TP
+      cache keeps full KV heads). The int8 KV cache rides along: the
+      quantize/dequantize runs against the TP-replicated scale entries,
+      no extra collective.
+    * ``moe``    — expert parallelism on the same axis: attention is TP
       as above, and the experts shard whole across the axis so MoE
       dispatch/combine run through the init-compiled capacity-bucketed
       all_to_all plans (``d_ff`` divisibility is irrelevant — experts
       never split).
+    * ``hybrid`` — dense TP plus SSM head sharding: the SSM inner dim
+      (``d_inner == d_model``) shards over the axis, its recurrent
+      state stays model-sharded in the cache, and the SSM output
+      reduction replays the same per-layer AllReduce plan as the
+      attention/MLP partials.
 
-    Anything else falls back to auto/GSPMD."""
+    Anything else (rwkv6, encoder) falls back to auto/GSPMD."""
     from repro.models.blocks import padded_heads
 
     m = ax.model
     tp = int(mesh.shape.get(m, 1)) if m in mesh.shape else 1
     if tp <= 1:
         return False, "no TP axis of size > 1: nothing to make explicit"
-    if cfg.family not in ("dense", "moe"):
+    if cfg.family not in ("dense", "moe", "hybrid"):
         return False, (f"family {cfg.family!r} not supported (explicit "
-                       "decode covers dense TP and MoE expert parallelism)")
+                       "decode covers dense TP, MoE expert parallelism, "
+                       "and hybrid attention+SSM head sharding)")
     nh, _ = padded_heads(cfg)
     if nh % tp != 0:
         return False, f"attention heads {nh} not divisible by TP={tp}"
@@ -283,6 +292,9 @@ def explicit_decode_supported(cfg: ModelConfig, mesh: Mesh,
                            "(TP-in-expert has no explicit path)")
     elif cfg.d_ff % tp != 0:
         return False, f"d_ff {cfg.d_ff} not divisible by TP={tp}"
+    if cfg.family == "hybrid" and cfg.d_model % tp != 0:
+        return False, (f"SSM inner dim d_model {cfg.d_model} not "
+                       f"divisible by TP={tp}")
     return True, ""
 
 
@@ -295,7 +307,15 @@ def explicit_decode_pspecs(cfg: ModelConfig, mesh: Mesh,
     sharding — their partial sums are what the per-layer plan-replay
     AllReduce completes. MoE layers keep the expert-parallel layout
     (experts whole, sharded across the axis; router replicated) —
-    dispatch/combine go through the bucketed all_to_all plans."""
+    dispatch/combine go through the bucketed all_to_all plans.
+
+    Hybrid layers shard the SSM branch on ``d_inner`` (`_ssm_specs`),
+    except the two input projections ``w_in``/``w_bcdt`` which are
+    forced replicated — the input-dependent (dt, B, C) parameters
+    contract over the full ``d_inner``, so every rank computes them
+    whole (they are tiny) while the recurrence, skip, gate, and
+    ``w_out`` rows stay sharded; the ``w_out`` partial is completed by
+    the same AllReduce plan as the attention/MLP partials."""
     ok, why = explicit_decode_supported(cfg, mesh, ax)
     if not ok:
         raise ValueError(f"explicit-TP decode unsupported here: {why}")
@@ -304,8 +324,36 @@ def explicit_decode_pspecs(cfg: ModelConfig, mesh: Mesh,
     layers = []
     for layer in specs["layers"]:
         layer = dict(layer, attn=dict(layer["attn"], wk=rep_kv, wv=rep_kv))
+        if cfg.family == "hybrid":
+            layer["ssm"] = dict(layer["ssm"],
+                                w_in=P(None, None, None),
+                                w_bcdt=P(None, None, None))
         layers.append(layer)
     return dict(specs, layers=layers)
+
+
+def explicit_decode_cache_pspecs(cfg: ModelConfig, mesh: Mesh,
+                                 ax: MeshAxes = MeshAxes(), *,
+                                 batch: int, kv_lens: Optional[list] = None,
+                                 kv_quant: bool = False) -> dict:
+    """Decode-cache specs for the explicit decode step.
+
+    The KV entries (and the int8 scale entries alongside them) are kept
+    WHOLE along the model axis: every rank holds all KV heads, computes
+    the same new token from the replicated KV projections, and runs its
+    per-head attention locally. The hybrid SSM state is the exception —
+    it keeps its ``d_inner`` (= d_model) sharding from `cache_pspecs`,
+    because the manual body updates only its local SSM rows and the
+    output partial is completed by the per-layer AllReduce plan."""
+    cspecs = cache_pspecs(cfg, mesh, ax, batch=batch, kv_lens=kv_lens)
+    if kv_quant and "k" in cspecs:
+        cspecs = dict(cspecs, k_scale=list(cspecs["k"]),
+                      v_scale=list(cspecs["v"]))
+    ssm = cspecs.get("ssm")
+    out = strip_axis(cspecs, ax.model)
+    if ssm is not None:
+        out = dict(out, ssm=ssm)
+    return out
 
 
 def apply_fsdp(specs, shapes, mesh: Mesh, ax: MeshAxes = MeshAxes(),

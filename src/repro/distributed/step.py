@@ -231,10 +231,13 @@ def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
     replayed every generated token (paper §5.2):
 
     * ``layer_allreduce`` — the per-layer hidden-state AllReduce
-      (attention out-proj and MLP down-proj partials; also the
-      vocab-sharded embedding gather-reduce), bucketed over active-slot
-      counts so continuous batching replays a handful of plans instead
-      of compiling per distinct shape;
+      (attention out-proj and MLP down-proj partials; the hybrid
+      family's SSM out-proj partial; also the vocab-sharded embedding
+      gather-reduce), bucketed over active-slot counts so continuous
+      batching replays a handful of plans instead of compiling per
+      distinct shape. The int8 KV cache needs no additional plan:
+      cache and scale entries are TP-replicated, so quantize/dequantize
+      and the per-head scale gather are rank-local;
     * ``logits_allgather`` — the final vocab-sharded logits gather
       (only when the vocab divides the TP axis);
     * ``moe_alltoall`` — MoE family with experts divisible by the axis:
@@ -295,6 +298,14 @@ class TPDecodeComms:
         """Global index of this shard's first query head."""
         return jax.lax.axis_index(self.axis) * nh_local
 
+    def ssm_offset(self, d_local: int):
+        """Global index of this shard's first SSM ``d_inner`` row
+        (hybrid family): the SSM branch computes its recurrence on
+        ``d_local`` rows starting here, and its output partial is
+        completed by :meth:`hidden` — the same per-layer AllReduce
+        plan the attention/MLP partials replay."""
+        return jax.lax.axis_index(self.axis) * d_local
+
     def moe(self, lp, x):
         """Expert-parallel MoE layer on a (b, s, d_model) hidden state:
         dispatch and combine are replays of the init-compiled
@@ -351,16 +362,21 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
     * ``auto``     — pjit/GSPMD partitions the decode step; XLA inserts
       the per-layer TP psum (the NCCL-role baseline).
     * ``explicit`` — the decode step runs inside a shard_map MANUAL over
-      the TP (``model``) axis, and the two per-layer hidden-state
-      AllReduces (attention out-proj, MLP down-proj) + the vocab-sharded
-      embedding/logits collectives are replays of init-compiled
+      the TP (``model``) axis, and the per-layer hidden-state
+      AllReduces (attention out-proj, MLP down-proj, and the hybrid
+      family's SSM out-proj) + the vocab-sharded embedding/logits
+      collectives are replays of init-compiled
       :class:`~repro.core.comm.ExecutionPlan` s (bucketed over
       active-slot counts) — the paper's §5.2 decode hot path. For the
       MoE family the same axis carries expert parallelism: the per-layer
       dispatch/combine run through the init-compiled capacity-bucketed
       all_to_all plan (``TPDecodeComms.moe``). The KV
       cache is kept whole along ``model`` (heads stay full per device;
-      only weights shard), so attention math is local; the DP axes are
+      only weights shard), so attention math is local — with
+      ``kv_quant`` the int8 cache and its scale entries replicate the
+      same way, so quantize/dequantize is rank-local too; the hybrid
+      SSM state is the one cache entry that stays model-sharded
+      (``sharding.explicit_decode_cache_pspecs``). The DP axes are
       included in the manual set by default (``manual_dp=True``), which
       keeps the whole step fully manual and therefore runnable on
       legacy jax. ``manual_dp=False`` leaves the DP axes to GSPMD —
@@ -400,8 +416,6 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
     if mode != "explicit":
         raise ValueError(mode)
 
-    if kv_quant:
-        raise ValueError("mode='explicit' does not support kv_quant")
     if fsdp:
         raise ValueError(
             "mode='explicit' does not support fsdp: the manual body uses "
@@ -426,7 +440,10 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
 
     tp = int(mesh.shape[ax.model])
     pspecs_x = shd.explicit_decode_pspecs(cfg, mesh, ax)
-    cspecs_x = shd.strip_axis(cspecs, ax.model)   # cache whole along TP
+    # cache whole along TP — except the hybrid SSM state, which stays
+    # model-sharded (each rank carries its d_inner rows)
+    cspecs_x = shd.explicit_decode_cache_pspecs(
+        cfg, mesh, ax, batch=batch, kv_lens=kv_lens, kv_quant=kv_quant)
     csh_x = shd.shardings_for(cspecs_x, mesh)
     if comm is None:
         comm = comm_lib.Communicator(ax.model, n=tp,

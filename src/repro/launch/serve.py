@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--mode", choices=("auto", "explicit"), default="auto",
                     help="decode partitioning: GSPMD (auto) or the "
                          "explicit-TP plan-replay hot path (§5.2)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache with per-token scales "
+                         "(both modes; explicit keeps scales "
+                         "TP-replicated next to the cache)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch)
@@ -49,7 +53,8 @@ def main():
     params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
     eng = Engine(cfg, params, mesh,
                  ServeConfig(batch=args.batch, max_kv=args.max_kv,
-                             temperature=args.temperature, mode=args.mode))
+                             temperature=args.temperature, mode=args.mode,
+                             kv_quant=args.kv_quant))
     if args.mode != eng.mode:
         print(f"note: mode={args.mode} unavailable, running {eng.mode}")
     prompts = np.random.RandomState(0).randint(

@@ -186,16 +186,18 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     over the TP axis. Each local head gathers its own KV head, so any
     head split works (no per-shard whole-group requirement), and the
     returned projection is this shard's PARTIAL sum over d_model — the
-    caller completes it with the per-layer AllReduce plan.
+    caller completes it with the per-layer AllReduce plan. Composes
+    with the int8 KV cache: every rank quantizes the same new token
+    against the same scale (KV projections are replicated, so the
+    TP-replicated cache and scale entries stay bit-consistent), and the
+    per-head dequantize gathers its head's scales alongside the KV
+    gather — no extra collective.
     """
     b, _, d = x.shape
     hd = cfg.hd
     nh, nkv = padded_heads(cfg)
     max_kv = cache_k.shape[2]
     quant = cache_k.dtype == jnp.int8
-    if quant and head_offset is not None:
-        raise NotImplementedError(
-            "explicit-TP decode does not support the int8 KV cache")
 
     q = jnp.einsum("bsd,dnh->bnsh", x, p["wq"])
     k_new = jnp.einsum("bsd,dnh->bnsh", x, p["wk"])
@@ -228,10 +230,13 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
 
     g = nh // nkv
     if head_offset is not None:
-        return (_decode_attn_tp_shard(p, q, cache_k, cache_v, pos, cfg,
-                                      window=window, head_offset=head_offset,
-                                      slot=slot, g=g),
-                cache_k, cache_v)
+        out = _decode_attn_tp_shard(p, q, cache_k, cache_v, pos, cfg,
+                                    window=window, head_offset=head_offset,
+                                    slot=slot, g=g,
+                                    k_scale=k_scale, v_scale=v_scale)
+        if quant:
+            return out, cache_k, cache_v, k_scale, v_scale
+        return out, cache_k, cache_v
     q = q.reshape(b, nkv, g, 1, hd)
     if quant:
         # int8 dot in bf16 compute (C2: halves the dequant materialization
@@ -273,20 +278,34 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
 
 
 def _decode_attn_tp_shard(p: Params, q, cache_k, cache_v, pos, cfg,
-                          *, window: Optional[int], head_offset, slot, g):
+                          *, window: Optional[int], head_offset, slot, g,
+                          k_scale=None, v_scale=None):
     """Per-shard attention for the explicit-TP decode path.
 
     q: (b, nh_local, 1, hd) — this shard's heads; cache_k/v hold the
     FULL (replicated) KV heads. Each local head attends to its own KV
     head via a gather, computing exactly the reference per-head math;
     the final ``wo`` projection over local heads is a partial sum the
-    caller AllReduces."""
+    caller AllReduces. With an int8 cache the per-head gather also
+    pulls that head's ``k_scale``/``v_scale`` rows (replicated like the
+    cache), and the dequantize folds them into the attention products
+    exactly as the unsharded quant path does — bf16 dots, f32
+    accumulation, scale applied per key position."""
     b, nh_l, _, hd = q.shape
     max_kv = cache_k.shape[2]
+    quant = cache_k.dtype == jnp.int8
     hid = head_offset + jnp.arange(nh_l)            # global head ids
     k_sel = jnp.take(cache_k, hid // g, axis=1)     # (b, nh_l, max_kv, hd)
     v_sel = jnp.take(cache_v, hid // g, axis=1)
-    logits = jnp.einsum("bnsh,bnth->bnst", q, k_sel).astype(jnp.float32)
+    if quant:
+        ks_sel = jnp.take(k_scale, hid // g, axis=1)   # (b, nh_l, max_kv, 1)
+        vs_sel = jnp.take(v_scale, hid // g, axis=1)
+        logits = jnp.einsum("bnsh,bnth->bnst", q.astype(jnp.bfloat16),
+                            k_sel.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        logits = logits * ks_sel[..., 0][:, :, None, :].astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bnsh,bnth->bnst", q, k_sel).astype(jnp.float32)
     logits *= hd ** -0.5
     k_pos = jnp.arange(max_kv)
     if window is not None:
@@ -296,8 +315,15 @@ def _decode_attn_tp_shard(p: Params, q, cache_k, cache_v, pos, cfg,
         valid = k_pos <= pos
     logits = jnp.where(valid[None, None, None, :], logits,
                        jnp.finfo(jnp.float32).min)
-    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bnst,bnth->bnsh", probs, v_sel)
+    if quant:
+        probs = jax.nn.softmax(logits, axis=-1)
+        pscaled = probs * vs_sel[..., 0][:, :, None, :].astype(jnp.float32)
+        out = jnp.einsum("bnst,bnth->bnsh", pscaled.astype(jnp.bfloat16),
+                         v_sel.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32).astype(q.dtype)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bnst,bnth->bnsh", probs, v_sel)
     nh, _ = padded_heads(cfg)
     if nh > cfg.n_heads:
         head_mask = (hid < cfg.n_heads).astype(out.dtype)

@@ -34,15 +34,25 @@ def init_ssm_state(cfg, batch: int, d_inner: int, dtype=jnp.float32):
     return jnp.zeros((batch, d_inner, cfg.ssm.state_dim), dtype)
 
 
-def _ssm_params(p, x, cfg):
+def _ssm_params(p, x, cfg, *, d_offset=None):
+    """Input-dependent SSM parameters. ``d_offset`` is the explicit-TP
+    decode path: ``w_in``/``w_bcdt`` arrive full (replicated) so the
+    shared (dt_raw, B, C) projections are computed over the whole
+    ``d_inner`` — they are tiny and contract over it, so replicating
+    the matmul avoids a cross-shard reduction — while ``w_dt``/
+    ``a_log`` arrive as this shard's ``d_inner`` rows and ``xin``/``z``
+    are sliced down to the matching local chunk."""
     b, s_len, _ = x.shape
     st = cfg.ssm.state_dim
-    dt_rank = cfg.ssm.dt_rank or max(cfg.d_model // 16, 1)
     xz = x @ p["w_in"]
     xin, z = jnp.split(xz, 2, axis=-1)                     # (b, s, d_inner)
     bcdt = xin @ p["w_bcdt"]
     B = bcdt[..., :st].astype(jnp.float32)                 # (b, s, st)
     C = bcdt[..., st:2 * st].astype(jnp.float32)
+    if d_offset is not None:
+        d_local = p["a_log"].shape[0]
+        xin = jax.lax.dynamic_slice_in_dim(xin, d_offset, d_local, axis=-1)
+        z = jax.lax.dynamic_slice_in_dim(z, d_offset, d_local, axis=-1)
     dt = jax.nn.softplus((bcdt[..., 2 * st:] @ p["w_dt"]).astype(jnp.float32))
     A = -jnp.exp(p["a_log"].astype(jnp.float32))           # (d_inner, st)
     dA = jnp.exp(dt[..., None] * A[None, None])            # (b, s, d_inner, st)
@@ -75,9 +85,18 @@ def ssm_forward(p, x, cfg, state=None):
     return (y.astype(x.dtype) @ p["w_out"]), final
 
 
-def ssm_decode_step(p, x, state, cfg):
-    """x: (b, 1, d_model); state: (b, d_inner, st). O(1) update."""
-    xin, z, dA, dBx, C = _ssm_params(p, x, cfg)
+def ssm_decode_step(p, x, state, cfg, *, d_offset=None):
+    """x: (b, 1, d_model); state: (b, d_inner, st). O(1) update.
+
+    ``d_offset`` (explicit-TP decode, §5.2 hot path): when given, ``p``
+    holds the full input projections but only this shard's ``d_inner``
+    rows of ``w_dt``/``a_log``/``d_skip``/``w_out`` (see
+    ``sharding.explicit_decode_pspecs``), ``state`` is the shard's
+    (b, d_local, st) slice starting at that global row index, and the
+    returned output is the shard's PARTIAL sum over ``d_model`` — the
+    caller completes it with the per-layer AllReduce plan, exactly like
+    the attention out-proj and MLP down-proj partials."""
+    xin, z, dA, dBx, C = _ssm_params(p, x, cfg, d_offset=d_offset)
     h = dA[:, 0] * state + dBx[:, 0]                      # (b, d_inner, st)
     y = jnp.einsum("bdk,bk->bd", h, C[:, 0])
     y = y + xin[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)

@@ -219,23 +219,30 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
     ``comms`` — the per-layer TP/EP communication hook of the explicit
     decode path (``repro.distributed.step.TPDecodeComms``). When given,
     this function runs INSIDE a shard_map that is manual over the TP
-    axis: parameters arrive as TP shards, the two per-layer hidden-state
-    partial sums (attention out-proj, MLP down-proj) are completed by
-    ``comms.hidden`` (a replay of the engine's init-compiled AllReduce
-    plan, not a GSPMD-inserted psum), the embedding lookup and final
-    logits go through ``comms.embed`` / ``comms.logits`` (vocab-sharded
-    tables), and attention receives its shard's global head offset. For
-    the MoE family the per-layer expert block runs ``comms.moe`` —
-    expert-parallel dispatch/combine through the init-compiled
-    capacity-bucketed all_to_all plan — instead of the dense-einsum
-    oracle. ``comms=None`` is the auto/GSPMD path, unchanged.
+    axis: parameters arrive as TP shards, the per-layer hidden-state
+    partial sums (attention out-proj, MLP down-proj, and the hybrid
+    family's SSM out-proj) are completed by ``comms.hidden`` (a replay
+    of the engine's init-compiled AllReduce plan, not a GSPMD-inserted
+    psum), the embedding lookup and final logits go through
+    ``comms.embed`` / ``comms.logits`` (vocab-sharded tables), and
+    attention receives its shard's global head offset — with an int8 KV
+    cache the per-head dequantize runs against the TP-replicated
+    ``k_scale``/``v_scale`` entries, gathered per head alongside the KV
+    gather. For the MoE family the per-layer expert block runs
+    ``comms.moe`` — expert-parallel dispatch/combine through the
+    init-compiled capacity-bucketed all_to_all plan — instead of the
+    dense-einsum oracle. For the hybrid family the SSM branch runs on
+    its shard's ``d_inner`` rows (``comms.ssm_offset``; state arrives
+    model-sharded). ``comms=None`` is the auto/GSPMD path, unchanged.
     """
     if comms is not None and (
-            cfg.family not in ("dense", "moe") or "k_scale" in cache
+            cfg.family not in ("dense", "moe", "hybrid")
             or (cfg.family == "moe" and comms.moe_plan is None)):
         raise NotImplementedError(
-            "explicit decode supports the dense and MoE (with a compiled "
-            "moe_alltoall plan) families with an unquantized KV cache")
+            "explicit decode covers the dense, hybrid (attention+SSM), and "
+            "MoE (with a compiled moe_alltoall plan) families — fp and "
+            "int8 KV caches alike; rwkv6/encoder configs stay on "
+            "auto/GSPMD")
     if not jnp.issubdtype(tokens.dtype, jnp.integer):
         x = tokens.astype(cfg.jdtype)[:, None]          # embedded input
     elif comms is not None:
@@ -262,24 +269,37 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
         for i, win in enumerate(wins):
             lp = gp_list[i]
             h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            ho = (comms.head_offset(lp["attn"]["wq"].shape[-2])
+                  if comms is not None else None)
             if quant:
                 att, k_upd, v_upd, ks_upd, vs_upd = blocks.decode_attention(
                     lp["attn"], h, ck[i], cv[i], pos, cfg, window=win,
-                    k_scale=ksc[i], v_scale=vsc[i])
+                    k_scale=ksc[i], v_scale=vsc[i], head_offset=ho)
                 new_ksc.append(ks_upd)
                 new_vsc.append(vs_upd)
             else:
-                ho = (comms.head_offset(lp["attn"]["wq"].shape[-2])
-                      if comms is not None else None)
                 att, k_upd, v_upd = blocks.decode_attention(
                     lp["attn"], h, ck[i], cv[i], pos, cfg, window=win,
                     head_offset=ho)
             if cfg.family == "hybrid":
-                s_out, s_new = ssm.ssm_decode_step(lp["ssm"], h, sst[i], cfg)
-                att = (att + s_out) * 0.5
+                if comms is not None:
+                    # SSM runs on this shard's d_inner rows; its w_out
+                    # partial is completed by its own replay of the
+                    # layer AllReduce plan (matching auto's psum
+                    # placement: attention and SSM reduce separately,
+                    # then average)
+                    s_out, s_new = ssm.ssm_decode_step(
+                        lp["ssm"], h, sst[i], cfg,
+                        d_offset=comms.ssm_offset(lp["ssm"]["a_log"].shape[0]))
+                    s_out = comms.hidden(s_out)
+                else:
+                    s_out, s_new = ssm.ssm_decode_step(lp["ssm"], h,
+                                                       sst[i], cfg)
                 new_s.append(s_new)
             if comms is not None:
                 att = comms.hidden(att)     # complete the out-proj partial
+            if cfg.family == "hybrid":
+                att = (att + s_out) * 0.5
             x = x + att
             h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
             if cfg.family == "moe":

@@ -54,6 +54,7 @@ class ServeConfig:
     eos_id: int = 2
     temperature: float = 0.0       # 0 -> greedy
     mode: str = "auto"             # 'auto' (GSPMD) | 'explicit' (plan replay)
+    kv_quant: bool = False         # int8 KV cache with per-token scales
 
 
 class Engine:
@@ -87,7 +88,7 @@ class Engine:
                 self.step_fn, _ = make_serve_step(
                     cfg, mesh, ax, batch=serve_cfg.batch,
                     max_kv=serve_cfg.max_kv, donate=True, mode="explicit",
-                    comm=self.comm)
+                    kv_quant=serve_cfg.kv_quant, comm=self.comm)
             except (NotImplementedError, ValueError) as e:
                 warnings.warn(
                     f"mode='explicit' unavailable ({e}); falling back to "
@@ -96,8 +97,11 @@ class Engine:
         if self.mode == "auto":
             self.step_fn, _ = make_serve_step(
                 cfg, mesh, ax, batch=serve_cfg.batch,
-                max_kv=serve_cfg.max_kv, donate=True)
-        self.cache = tf.init_cache(cfg, serve_cfg.batch, serve_cfg.max_kv)
+                max_kv=serve_cfg.max_kv, donate=True,
+                kv_quant=serve_cfg.kv_quant)
+        self.cache = tf.init_cache(
+            cfg, serve_cfg.batch, serve_cfg.max_kv,
+            dtype=jnp.int8 if serve_cfg.kv_quant else None)
         self.pos = 0
         self.active = np.zeros(serve_cfg.batch, bool)
 
@@ -105,9 +109,11 @@ class Engine:
         """Per-bucket cost cards + dispatch hit counts of the decode-step
         plans, plus the per-token predicted communication time at full
         slot occupancy: per layer, 2 AllReduces (dense: attention
-        out-proj + MLP down-proj) or 1 AllReduce + 2 EP all_to_alls
-        (MoE: out-proj + dispatch/combine), plus the embedding
-        gather-reduce and final logits gather."""
+        out-proj + MLP down-proj), 3 AllReduces (hybrid: + the SSM
+        out-proj), or 1 AllReduce + 2 EP all_to_alls (MoE: out-proj +
+        dispatch/combine), plus the embedding gather-reduce and final
+        logits gather. The int8 KV cache adds no collective (see
+        ``compile_decode_plans``)."""
         def top_plan(p):
             return p.plans[p.buckets[-1]] if isinstance(
                 p, comm_lib.BucketedPlan) else p
@@ -122,9 +128,10 @@ class Engine:
         ar = self.decode_plans.get("layer_allreduce")
         if ar is not None:
             # dense layers replay it twice (attention out-proj + MLP
-            # down-proj); MoE layers once — the expert block's combine
-            # happens in the all_to_all pair, not an AllReduce
-            ar_per_layer = 1 if self.cfg.family == "moe" else 2
+            # down-proj); hybrid adds the SSM out-proj; MoE layers once
+            # — the expert block's combine happens in the all_to_all
+            # pair, not an AllReduce
+            ar_per_layer = {"moe": 1, "hybrid": 3}.get(self.cfg.family, 2)
             per_tok += ar_per_layer * self.cfg.n_layers * \
                 top_plan(ar).estimate_us
             if "logits_allgather" in self.decode_plans:

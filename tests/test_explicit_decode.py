@@ -1,9 +1,10 @@
 """Explicit decode hot path (paper §5.2): auto-vs-explicit greedy
-bit-equivalence (dense TP and MoE expert parallelism), plan replay
-(compile counters flat across decode calls), bucketed plan compilation
-+ pad-at-dispatch correctness for every padding strategy (rows / tiled
-/ blocks), the partial-manual shard_map guard, and graceful auto
-fallback."""
+bit-equivalence (dense TP, MoE expert parallelism, hybrid attention+SSM
+head sharding, and the int8 KV cache), plan replay (compile counters
+flat across decode calls), bucketed plan compilation + pad-at-dispatch
+correctness for every padding strategy (rows / tiled / blocks), the
+partial-manual shard_map guard, and graceful auto fallback (rwkv6 —
+the one remaining decode family with no explicit path)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -153,6 +154,114 @@ def test_moe_explicit_rejects_without_plan():
     with pytest.raises(NotImplementedError, match="moe_alltoall"):
         tf.decode_step({}, cfg, cache, jnp.zeros((2,), jnp.int32),
                        jnp.int32(0), comms=comms)
+
+
+# ---------------------------------------------------------------------------
+# explicit hybrid (attention+SSM head sharding) and int8-KV decode
+# ---------------------------------------------------------------------------
+def _hybrid_cfg():
+    return configs.reduced(configs.get_config("hymba-1.5b"))
+
+
+@pytest.mark.parametrize("dp,tp", [(1, 2), (2, 4)])
+def test_hybrid_decode_auto_vs_explicit_bit_equal(dp, tp):
+    """Hybrid greedy tokens identical over >= 16 steps at TP in {2, 4}:
+    the SSM branch runs on each shard's d_inner rows (state
+    model-sharded in the cache) and its out-proj partial is completed
+    by its own replay of the per-layer AllReduce plan."""
+    mesh = _mesh((dp, tp), ("data", "model"))
+    cfg = _hybrid_cfg()
+    params = _params(cfg, mesh)
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (4, 4)).astype(np.int32)
+
+    toks = {}
+    for mode in ("auto", "explicit"):
+        eng = Engine(cfg, params, mesh, ServeConfig(batch=4, max_kv=64),
+                     mode=mode)
+        assert eng.mode == mode          # no silent fallback
+        logits = eng.prefill(prompts)
+        toks[mode] = eng.decode(logits, num_tokens=16)
+    np.testing.assert_array_equal(toks["auto"], toks["explicit"])
+
+
+def test_hybrid_explicit_replays_not_recompiles():
+    """Hybrid decode stays pure plan replay: compile counters flat, the
+    layer AllReduce serving three partials per layer (attention, SSM,
+    MLP) all through the same bucketed plan family."""
+    mesh = _mesh((2, 2), ("data", "model"))
+    cfg = _hybrid_cfg()
+    eng = Engine(cfg, _params(cfg, mesh), mesh,
+                 ServeConfig(batch=4, max_kv=32), mode="explicit")
+    assert eng.mode == "explicit"
+    compiles_at_init = eng.comm.stats["compiles"]
+    assert compiles_at_init > 0
+    prompts = np.random.RandomState(1).randint(
+        0, cfg.vocab, (4, 3)).astype(np.int32)
+    eng.decode(eng.prefill(prompts), num_tokens=2)
+    assert eng.comm.stats["compiles"] == compiles_at_init
+    ar = eng.decode_plans["layer_allreduce"]
+    assert isinstance(ar, BucketedPlan)
+    assert ar.hits[ar.bucket_for(2)] > 0         # batch=4, dp=2 -> 2 local
+    # hybrid accounting: 3 AllReduces per layer in the predicted cost
+    rep = eng.plan_report()
+    assert rep["predicted_comm_us_per_token"] > 0
+
+
+def test_hybrid_explicit_cache_keeps_ssm_model_sharded():
+    """The explicit cache contract: KV entries whole along 'model', the
+    SSM state still sharded on it (each rank carries its d_inner rows)."""
+    mesh = _mesh((2, 2), ("data", "model"))
+    cfg = _hybrid_cfg()
+    cspecs = shd.explicit_decode_cache_pspecs(
+        cfg, mesh, shd.MeshAxes(), batch=4, kv_lens=[16])
+
+    def _axes(sp):
+        out = []
+        for e in tuple(sp):
+            if isinstance(e, (tuple, list)):
+                out += list(e)
+            elif e is not None:
+                out.append(e)
+        return out
+
+    for sp in jax.tree.leaves(cspecs["k"] + cspecs["v"],
+                              is_leaf=lambda x: isinstance(x, P)):
+        assert "model" not in _axes(sp)
+    for sp in cspecs["ssm"]:
+        assert "model" in _axes(sp)
+
+
+@pytest.mark.parametrize("dp,tp,arch", [
+    (1, 2, "qwen3-1.7b"),
+    (2, 4, "qwen3-1.7b"),
+    (1, 2, "hymba-1.5b"),        # int8 KV composes with the hybrid family
+    (1, 2, "mixtral-8x22b"),     # ...and with MoE expert parallelism
+])
+def test_int8_kv_decode_auto_vs_explicit_bit_equal(dp, tp, arch):
+    """int8 KV cache on the explicit path: greedy tokens identical to
+    auto over >= 16 steps at TP in {2, 4}. Every rank quantizes the
+    same new token against the same scale (KV projections replicated),
+    and the per-head dequantize gathers its head's scales alongside the
+    KV gather — no extra collective, so compile counters stay flat."""
+    mesh = _mesh((dp, tp), ("data", "model"))
+    cfg = configs.reduced(configs.get_config(arch))
+    params = _params(cfg, mesh)
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (4, 4)).astype(np.int32)
+
+    toks = {}
+    for mode in ("auto", "explicit"):
+        eng = Engine(cfg, params, mesh,
+                     ServeConfig(batch=4, max_kv=64, kv_quant=True),
+                     mode=mode)
+        assert eng.mode == mode          # no silent fallback
+        assert "k_scale" in eng.cache
+        compiles0 = eng.comm.stats["compiles"]
+        logits = eng.prefill(prompts)
+        toks[mode] = eng.decode(logits, num_tokens=16)
+        assert eng.comm.stats["compiles"] == compiles0
+    np.testing.assert_array_equal(toks["auto"], toks["explicit"])
 
 
 def test_make_serve_step_explicit_standalone():
@@ -323,10 +432,11 @@ def test_explicit_partial_manual_runs():
 
 
 def test_explicit_falls_back_gracefully_for_unsupported_family():
-    """A family the manual body cannot shard (hybrid attention+SSM)
-    warns and serves via auto instead of failing."""
+    """A family the manual body cannot shard (rwkv6's recurrent
+    time/channel mix — the one decode family left without an explicit
+    path) warns and serves via auto instead of failing."""
     mesh = _mesh((2, 4), ("data", "model"))
-    cfg = configs.reduced(configs.get_config("hymba-1.5b"))
+    cfg = configs.reduced(configs.get_config("rwkv6-7b"))
     params = _params(cfg, mesh)
     with pytest.warns(UserWarning, match="falling back to auto"):
         eng = Engine(cfg, params, mesh, ServeConfig(batch=4, max_kv=32),
@@ -336,13 +446,6 @@ def test_explicit_falls_back_gracefully_for_unsupported_family():
         0, cfg.vocab, (4, 2)).astype(np.int32)
     toks = eng.decode(eng.prefill(prompts), num_tokens=2)
     assert toks.shape == (4, 2)
-
-
-def test_explicit_rejects_kv_quant():
-    mesh = _mesh((2, 2), ("data", "model"))
-    with pytest.raises(ValueError, match="kv_quant"):
-        step_mod.make_serve_step(_cfg(), mesh, shd.MeshAxes(), batch=4,
-                                 max_kv=16, mode="explicit", kv_quant=True)
 
 
 def test_explicit_supported_predicate():
@@ -363,7 +466,15 @@ def test_explicit_supported_predicate():
     moe6 = dataclasses.replace(moe, moe=MoEConfig(num_experts=6, top_k=2))
     ok, why = shd.explicit_decode_supported(moe6, mesh)
     assert not ok and "experts" in why
-    # hybrid/rwkv stay auto-only
+    # hybrid: supported when heads, d_ff, AND the SSM inner dim divide
     hyb = configs.reduced(configs.get_config("hymba-1.5b"))
-    ok, why = shd.explicit_decode_supported(hyb, mesh)
+    ok, _ = shd.explicit_decode_supported(hyb, mesh)
+    assert ok
+    hyb_odd = dataclasses.replace(hyb, d_model=130)   # 130 % 4 != 0
+    ok, why = shd.explicit_decode_supported(hyb_odd, mesh)
+    assert not ok and "SSM" in why
+    # rwkv6 stays auto-only — no family-wide explicit path remains
+    # unsupported besides the recurrent ones
+    rwk = configs.reduced(configs.get_config("rwkv6-7b"))
+    ok, why = shd.explicit_decode_supported(rwk, mesh)
     assert not ok and "family" in why
