@@ -1,0 +1,202 @@
+"""Chaos bench — seeded fault injection against the robustness layer.
+
+Proves, on the emulated 2-device mesh and in seconds, the two claims
+``docs/robustness.md`` makes:
+
+* every **static** fault class (`repro.core.faults.STATIC_KINDS`)
+  injected into a registry program is rejected by the verifier before
+  lowering, and
+* every **runtime** fault class (`RUNTIME_KINDS`) fired inside an
+  executor is detected by the engine guardrails and recovered — retry
+  for transients, watchdog + auto-fallback for stalls, numeric guard +
+  auto-fallback for corruption — with the decoded tokens still equal
+  to the clean auto reference.
+
+Also records the overhead point: verification cost is compile-time
+(µs-scale per program); the replay hot path executes the verified
+artifact unchanged, so per-token overhead is zero by construction.
+
+Wired into ``scripts/check.sh --chaos`` and the ``--json`` payload
+(``bench=chaos_*`` points).
+"""
+import time
+
+
+def _registry_programs(sizes=(2, 4), levels=(0, 2)):
+    from repro.core import algorithms as algos
+    from repro.core import passes
+
+    for name in sorted(algos.REGISTRY):
+        build = algos.REGISTRY[name]
+        for n in sizes:
+            src = build(n, 0) if name == "broadcast_allpairs" else build(n)
+            for lvl in levels:
+                yield name, n, lvl, passes.optimize(src, lvl, n)
+
+
+def static_rejection_matrix(seeds=(0, 1)) -> dict:
+    """Inject every static fault kind into every registry program and
+    count verifier rejections. Returns the matrix summary; raises if
+    any mutation slips through (the mutation check of the acceptance
+    criteria)."""
+    from repro.core import faults
+    from repro.core.verify import verify_program
+
+    injected = rejected = 0
+    codes: dict = {}
+    t0 = time.perf_counter()
+    for name, n, lvl, prog in _registry_programs():
+        for kind in faults.STATIC_KINDS:
+            for seed in seeds:
+                try:
+                    bad = faults.inject_program(
+                        prog, faults.FaultSpec(kind, seed=seed), n)
+                except ValueError:
+                    continue       # program has no such instruction
+                injected += 1
+                report = verify_program(bad, n)
+                if report.ok:
+                    raise AssertionError(
+                        f"verifier MISSED {kind} in {name} n={n} O{lvl} "
+                        f"seed={seed}")
+                rejected += 1
+                for f in report.findings:
+                    codes[f.code] = codes.get(f.code, 0) + 1
+    wall = time.perf_counter() - t0
+    return dict(injected=injected, rejected=rejected,
+                finding_codes=dict(sorted(codes.items())),
+                wall_s=round(wall, 2),
+                verify_us_per_program=round(wall / max(injected, 1) * 1e6))
+
+
+def _tiny_engine(mode, serve_kw, *, tp=2, batch=2, prompt_len=3):
+    """2-device TP engine over the tiny bench model, plus its prompts."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from benchmarks.llm_inference import _bench_cfg
+    from repro.distributed import sharding as shd
+    from repro.distributed.step import init_sharded
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = _bench_cfg()
+    mesh = Mesh(np.asarray(jax.devices()[:tp]).reshape(1, tp),
+                ("data", "model"))
+    params, _ = init_sharded(cfg, mesh, shd.MeshAxes(), jax.random.key(0))
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+    eng = Engine(cfg, params, mesh,
+                 ServeConfig(batch=batch, max_kv=32, mode=mode, **serve_kw))
+    return eng, prompts
+
+
+def runtime_recovery_smoke(tokens=4) -> dict:
+    """Fire each runtime fault class inside the explicit engine and
+    assert the guardrails detect + recover it: the decoded greedy
+    tokens must equal the clean auto reference every time."""
+    from repro.core import faults
+
+    def run(eng, prompts, spec=None):
+        t0 = time.perf_counter()
+        if spec is None:
+            toks = eng.decode(eng.prefill(prompts), num_tokens=tokens)
+        else:
+            with faults.inject(spec) as inj:
+                toks = eng.decode(eng.prefill(prompts), num_tokens=tokens)
+            assert inj.fired > 0, f"{spec.kind} never fired"
+        return toks, (time.perf_counter() - t0) * 1e3
+
+    # clean references: auto tokens are the ground truth the recovered
+    # engines must reproduce
+    ref_eng, prompts = _tiny_engine("auto", {})
+    ref_toks, ref_ms = run(ref_eng, prompts)
+
+    results = {}
+
+    # fail_call: transient executor failure -> bounded retry, engine
+    # STAYS explicit
+    eng, _ = _tiny_engine("explicit", {})
+    toks, ms = run(eng, prompts, faults.FaultSpec("fail_call", count=1))
+    assert eng.mode == "explicit", "retry should recover without fallback"
+    assert eng.health["retries"] >= 1
+    assert (toks == ref_toks).all(), "recovered tokens diverged"
+    results["fail_call"] = dict(recovered="retry", ms=round(ms, 1),
+                                retries=eng.health["retries"])
+
+    # corrupt_chunk: poisoned payload -> numeric guard detects the
+    # non-finite logits, engine degrades to auto and re-runs the step
+    eng, _ = _tiny_engine("explicit", dict(guard_numerics=True))
+    toks, ms = run(eng, prompts, faults.FaultSpec("corrupt_chunk", count=1))
+    assert eng.mode == "auto", "numeric guard should degrade to auto"
+    assert eng.health["faults_detected"] >= 1
+    assert (toks == ref_toks).all(), "recovered tokens diverged"
+    results["corrupt_chunk"] = dict(
+        recovered="numeric-guard+auto-fallback", ms=round(ms, 1),
+        faults_detected=eng.health["faults_detected"])
+
+    # stall_rank: the watchdog times the step out, engine degrades to
+    # auto and re-runs the step there
+    eng, _ = _tiny_engine("explicit", dict(plan_timeout_s=0.75))
+    toks, ms = run(eng, prompts,
+                   faults.FaultSpec("stall_rank", count=1, delay_s=5.0))
+    assert eng.mode == "auto", "watchdog should degrade to auto"
+    assert eng.health["timeouts"] >= 1
+    assert (toks == ref_toks).all(), "recovered tokens diverged"
+    results["stall_rank"] = dict(
+        recovered="watchdog+auto-fallback", ms=round(ms, 1),
+        timeouts=eng.health["timeouts"])
+
+    return dict(reference_ms=round(ref_ms, 1), faults=results)
+
+
+def verifier_overhead_point(points=None) -> dict:
+    """Compile-time verifier cost vs. verify='off', same plans. The
+    replay path executes the identical verified artifact, so per-token
+    replay overhead is zero by construction — the number that matters
+    is the one-off compile cost."""
+    import jax.numpy as jnp
+
+    from repro.core.comm import Communicator
+
+    shapes = [("all_reduce", (256, 128)), ("all_gather", (32, 128)),
+              ("reduce_scatter", (256, 128)), ("all_to_all", (256, 128))]
+
+    def compile_all(verify):
+        comm = Communicator("x", n=8, backend="xla", verify=verify)
+        t0 = time.perf_counter()
+        for coll, shape in shapes:
+            comm.compile(coll, shape, jnp.float32)
+        return (time.perf_counter() - t0) * 1e3, comm
+
+    off_ms, _ = compile_all("off")
+    strict_ms, comm = compile_all("strict")
+    point = dict(
+        bench="chaos_verifier_overhead", n=8, plans=len(shapes),
+        compile_ms_off=round(off_ms, 2),
+        compile_ms_strict=round(strict_ms, 2),
+        verify_overhead_ms=round(strict_ms - off_ms, 2),
+        verified=comm.health["verified"],
+        replay_overhead_us_per_token=0.0,   # compile-time only
+    )
+    if points is not None:
+        points.append(point)
+    return point
+
+
+def chaos_smoke(points=None) -> dict:
+    """The full chaos smoke: static rejection matrix + runtime recovery
+    + overhead point. Seconds-fast, 2-device; ``scripts/check.sh
+    --chaos`` runs exactly this."""
+    summary = dict(
+        static=static_rejection_matrix(),
+        runtime=runtime_recovery_smoke(),
+        overhead=verifier_overhead_point(points),
+    )
+    if points is not None:
+        rt = summary["runtime"]
+        points.append(dict(
+            bench="chaos_runtime_recovery",
+            reference_ms=rt["reference_ms"],
+            **{f"{k}_ms": v["ms"] for k, v in rt["faults"].items()}))
+    return summary

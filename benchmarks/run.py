@@ -24,8 +24,15 @@ also feeds deployment tuning: ``selector.fit_link_model`` and
 ``--smoke``: seconds-fast Communicator/ExecutionPlan plan-path check
 (compile-once contract + tiny timed points); wired into
 ``scripts/check.sh --smoke`` so plan regressions surface per PR.
+
+``--chaos``: seeded fault-injection smoke (``benchmarks/chaos.py``):
+static fault classes must be rejected by the plan verifier, runtime
+fault classes must be detected + recovered by the engine guardrails;
+also records the verifier/recovery overhead point. Wired into
+``scripts/check.sh --chaos``.
 """
 import json
+import os as _os
 import pathlib
 import sys
 
@@ -33,6 +40,14 @@ import sys
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 if str(_ROOT) not in sys.path:
     sys.path.insert(0, str(_ROOT))
+
+
+def _write_atomic(path: pathlib.Path, text: str) -> None:
+    """Write via temp file + rename so a mid-run crash can never leave
+    a truncated file where a previous good artifact was."""
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(text)
+    _os.replace(tmp, path)
 
 
 def main(argv=None) -> None:
@@ -63,6 +78,27 @@ def main(argv=None) -> None:
               f"pred_comm={hyb['predicted_comm_us_per_token']}us/token "
               f"bucket_hits={hyb['hits']} — bit-identical to auto OK")
         return
+    if "--chaos" in argv:
+        from benchmarks import chaos
+
+        summary = chaos.chaos_smoke()
+        st = summary["static"]
+        print(f"chaos static: {st['rejected']}/{st['injected']} injected "
+              f"program mutations rejected by the verifier "
+              f"(~{st['verify_us_per_program']}us/program) — "
+              f"codes={st['finding_codes']}")
+        rt = summary["runtime"]
+        for kind, r in rt["faults"].items():
+            print(f"chaos runtime: {kind} -> {r['recovered']} "
+                  f"({r['ms']}ms vs {rt['reference_ms']}ms clean), "
+                  f"tokens == auto reference OK")
+        ov = summary["overhead"]
+        print(f"chaos overhead: verify adds {ov['verify_overhead_ms']}ms "
+              f"over {ov['plans']} compiles "
+              f"(strict {ov['compile_ms_strict']}ms vs off "
+              f"{ov['compile_ms_off']}ms); replay overhead "
+              f"{ov['replay_overhead_us_per_token']}us/token — chaos OK")
+        return
     if "--json" in argv:
         from benchmarks import collectives, llm_inference
 
@@ -75,9 +111,13 @@ def main(argv=None) -> None:
         llm_inference.hybrid_decode_auto_vs_explicit(payload["points"])
         # ...and the int8 KV cache point (quantized cache, same plans)
         llm_inference.int8kv_decode_auto_vs_explicit(payload["points"])
+        # robustness: verifier compile-cost point (replay cost is zero
+        # by construction — verification is compile-time)
+        from benchmarks import chaos
+        chaos.verifier_overhead_point(payload["points"])
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
-        out.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+        _write_atomic(out, json.dumps(payload, indent=2, default=str) + "\n")
         geo = payload["geomean_speedup_allpairs"]
 
         def _pt(name):

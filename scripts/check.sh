@@ -15,6 +15,11 @@
 #                               # and check the docs pages exist —
 #                               # fails on drift so docs/examples
 #                               # cannot silently rot
+#   scripts/check.sh --chaos    # seeded fault-injection smoke
+#                               # (seconds-fast, 2-device): static
+#                               # faults rejected by the plan
+#                               # verifier, runtime faults detected +
+#                               # recovered by the engine guardrails
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -22,7 +27,8 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 run_docs() {
   echo "== doc smoke: docs pages present =="
   for f in README.md docs/architecture.md docs/plan-lifecycle.md \
-           docs/dsl.md docs/serving.md docs/tuning.md; do
+           docs/dsl.md docs/serving.md docs/tuning.md \
+           docs/robustness.md; do
     [[ -s "$f" ]] || { echo "MISSING: $f" >&2; exit 1; }
   done
   echo "== doc smoke: executing examples/*.py =="
@@ -55,6 +61,11 @@ if [[ "${1:-}" == "--smoke" ]]; then
 fi
 if [[ "${1:-}" == "--docs" ]]; then
   run_docs
+  exit 0
+fi
+if [[ "${1:-}" == "--chaos" ]]; then
+  shift
+  python benchmarks/run.py --chaos "$@"
   exit 0
 fi
 python -m pytest -x -q "$@"

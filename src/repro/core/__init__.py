@@ -8,7 +8,9 @@ from repro.core import (  # noqa: F401
     comm,
     dsl,
     executor,
+    faults,
     passes,
     primitives,
     selector,
+    verify,
 )

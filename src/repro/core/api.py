@@ -44,14 +44,15 @@ from typing import Optional
 
 from repro.core import comm as comm_lib
 from repro.core import selector as sel
-from repro.core.comm import (Communicator, ExecutionPlan, default_backend,
-                             default_communicator)
+from repro.core import verify as verify_mod
+from repro.core.comm import (BucketedPlan, Communicator, ExecutionPlan,
+                             default_backend, default_communicator)
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all",
     "broadcast", "hierarchical_all_reduce", "tree_all_reduce",
-    "default_backend", "compile_plan", "communicator",
-    "Communicator", "ExecutionPlan",
+    "default_backend", "compile_plan", "load_plan", "verify_plan",
+    "communicator", "Communicator", "ExecutionPlan", "BucketedPlan",
 ]
 
 
@@ -66,6 +67,44 @@ def compile_plan(collective: str, shape, dtype, axis: str,
     """Compile (or fetch) an ExecutionPlan on the default communicator.
     Outside traced code pass ``n=`` (the axis size) explicitly."""
     return default_communicator(axis).compile(collective, shape, dtype, **kw)
+
+
+def load_plan(source, *, verify: str = "strict"):
+    """Load an :class:`ExecutionPlan` or :class:`BucketedPlan` from a
+    plan-file path / JSON string, dispatching on the payload's
+    ``kind``. Loaded programs are **verified** before the executor
+    lowering is prepared (``verify='off'|'warn'|'strict'``) — plan
+    files cross a trust boundary and are validated, not trusted
+    (docs/robustness.md)."""
+    import json
+    import os
+
+    text = source
+    if isinstance(source, (bytes, os.PathLike)) or (
+            isinstance(source, str) and not source.lstrip().startswith("{")):
+        with open(source) as f:
+            text = f.read()
+    if json.loads(text).get("kind") == "bucketed_plan":
+        return BucketedPlan.from_json(text, verify=verify)
+    return ExecutionPlan.from_json(text, verify=verify)
+
+
+def verify_plan(plan, *, num_ranks: Optional[int] = None):
+    """Re-verify a compiled plan's program against the static checker
+    (:mod:`repro.core.verify`); returns the report. Bucketed families
+    verify every bucket and return the first failing report, else the
+    last."""
+    if isinstance(plan, BucketedPlan):
+        report = None
+        for b in plan.buckets:
+            report = verify_plan(plan.plans[b], num_ranks=num_ranks)
+            if report.findings:
+                return report
+        return report
+    root = 0 if plan.root is None else plan.root
+    return verify_mod.verify_program(
+        plan.program, num_ranks or plan.n,
+        collective=plan.collective, root=root)
 
 
 # ---------------------------------------------------------------------------
@@ -133,7 +172,7 @@ def all_to_all(x, axis: str, *, backend: Optional[str] = None,
     Serving hot paths should compile it bucketed over per-rank
     capacities instead — ``Communicator.plan_for("all_to_all", shape,
     dtype, buckets=...)`` pads token slots per block at dispatch
-    (docs/plan-lifecycle.md §7).
+    (docs/plan-lifecycle.md §8).
     """
     return default_communicator(axis).all_to_all(
         x, backend=backend, algo=algo, link=link, opt_level=opt_level)

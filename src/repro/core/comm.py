@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -49,6 +50,7 @@ from repro import compat
 from repro.core import algorithms as algos
 from repro.core import passes
 from repro.core import selector as sel
+from repro.core import verify as verify_mod
 from repro.core.dsl import Program, program_from_dict, program_to_dict
 from repro.core.executor import PallasExecutor, XlaExecutor
 
@@ -59,6 +61,36 @@ __all__ = [
 ]
 
 PLAN_FORMAT_VERSION = 1
+
+
+def _check_version(d: dict, what: str) -> None:
+    """Schema-version gate for plan payloads. Plans are written with
+    both ``version`` (the schema field) and ``format`` (its pre-PR-6
+    name) so either generation of reader accepts them."""
+    if d.get("version") is None and d.get("format") is None:
+        raise ValueError(
+            f"{what} payload has no schema 'version' field "
+            f"(keys: {sorted(d)[:8]}): not a plan file written by "
+            f"to_json(), or truncated")
+    for k in ("version", "format"):
+        v = d.get(k)
+        if v is not None and v != PLAN_FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported plan format version {v!r} (field {k!r}); "
+                f"this build reads version {PLAN_FORMAT_VERSION} — "
+                f"re-export the plan with to_json()")
+
+
+def _field(d: dict, key: str, what: str):
+    """Required-field access with an actionable error instead of the
+    raw KeyError a truncated/hand-edited plan file used to raise."""
+    try:
+        return d[key]
+    except KeyError:
+        raise ValueError(
+            f"{what} payload missing required field {key!r} "
+            f"(has {sorted(d)}): the plan file is truncated or "
+            f"corrupted") from None
 
 _COLLECTIVE_IDS = {  # stable barrier-semaphore ids per collective type
     "all_reduce": 8, "all_gather": 9, "reduce_scatter": 10,
@@ -194,7 +226,7 @@ class ExecutionPlan:
         """The plan as a JSON-compatible dict (program included) — the
         unit :meth:`to_json` wraps and :class:`BucketedPlan` nests."""
         return dict(
-            format=PLAN_FORMAT_VERSION,
+            version=PLAN_FORMAT_VERSION, format=PLAN_FORMAT_VERSION,
             collective=self.collective, algo=self.algo, axis=self.axis,
             n=self.n, shape=list(self.shape), dtype=self.dtype,
             backend=self.backend, opt_level=self.opt_level,
@@ -217,32 +249,44 @@ class ExecutionPlan:
         return json.dumps(self.to_dict(), **json_kw)
 
     @classmethod
-    def from_dict(cls, d: dict) -> "ExecutionPlan":
+    def from_dict(cls, d: dict, *, verify: str = "strict") -> "ExecutionPlan":
         """Rebuild a plan from :meth:`to_dict` output: the program is
-        reconstructed and the executor lowering re-prepared, but no
-        selection and no pass-pipeline work re-runs."""
-        if d.get("format") != PLAN_FORMAT_VERSION:
-            raise ValueError(f"unsupported plan format {d.get('format')!r}")
+        reconstructed, **verified** (loaded plan files are validated,
+        not trusted — ``verify='off'|'warn'|'strict'``), and the
+        executor lowering re-prepared; no selection and no
+        pass-pipeline work re-runs."""
+        _check_version(d, "ExecutionPlan")
         if d.get("kind") == "bucketed_plan":
             raise ValueError(
                 "bucketed plan payload; use BucketedPlan.from_json")
-        program = program_from_dict(d["program"])
-        executor = _build_executor(program, d["axis"], d["collective"],
-                                   d["backend"], d["opt_level"], d["n"])
+        req = lambda k: _field(d, k, "ExecutionPlan")  # noqa: E731
+        program = program_from_dict(req("program"))
+        collective, n = req("collective"), req("n")
+        root = req("root")
+        verify_mod.check(program, n, mode=verify, collective=collective,
+                         root=0 if root is None else root)
+        try:
+            link = sel.LinkModel(**req("link"))
+        except TypeError as e:
+            raise ValueError(
+                f"ExecutionPlan payload has a malformed 'link' field "
+                f"({e}): expected LinkModel keys") from None
+        executor = _build_executor(program, req("axis"), collective,
+                                   req("backend"), req("opt_level"), n)
         return cls(
-            collective=d["collective"], algo=d["algo"], axis=d["axis"],
-            n=d["n"], shape=tuple(d["shape"]), dtype=d["dtype"],
-            backend=d["backend"], opt_level=d["opt_level"],
-            requested_opt_level=d["requested_opt_level"],
-            root=d["root"], pad=d["pad"],
-            link=sel.LinkModel(**d["link"]),
-            estimate_us=d["estimate_us"],
-            comm_stats=dict(d["comm_stats"]),
+            collective=collective, algo=req("algo"), axis=req("axis"),
+            n=n, shape=tuple(req("shape")), dtype=req("dtype"),
+            backend=req("backend"), opt_level=req("opt_level"),
+            requested_opt_level=req("requested_opt_level"),
+            root=root, pad=req("pad"),
+            link=link,
+            estimate_us=req("estimate_us"),
+            comm_stats=dict(req("comm_stats")),
             program=program, executor=executor)
 
     @classmethod
-    def from_json(cls, s: str) -> "ExecutionPlan":
-        return cls.from_dict(json.loads(s))
+    def from_json(cls, s: str, *, verify: str = "strict") -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s), verify=verify)
 
 
 @dataclasses.dataclass(eq=False, repr=False)
@@ -300,9 +344,15 @@ class BucketedPlan:
         for b in self.buckets:
             if rows <= b:
                 return b
+        unit = ("rows per per-rank block" if self.pad_strategy == "blocks"
+                else "payload rows")
         raise ValueError(
-            f"rows={rows} exceeds the largest bucket {self.buckets[-1]} "
-            f"of {self!r}")
+            f"{self.collective} payload of {rows} {unit} exceeds the "
+            f"largest bucket of {self!r}: buckets cover "
+            f"{list(self.buckets)} {unit}. Recompile the family with a "
+            f"bucket that fits — plan_for(..., buckets=(*"
+            f"{list(self.buckets)}, {rows})) — or shrink the payload to "
+            f"<= {self.buckets[-1]} {unit}")
 
     def plan_for_rows(self, rows: int) -> ExecutionPlan:
         """The frozen :class:`ExecutionPlan` that would serve a payload
@@ -385,7 +435,8 @@ class BucketedPlan:
         json_kw.setdefault("indent", 2)
         json_kw.setdefault("sort_keys", True)
         return json.dumps(dict(
-            format=PLAN_FORMAT_VERSION, kind="bucketed_plan",
+            version=PLAN_FORMAT_VERSION, format=PLAN_FORMAT_VERSION,
+            kind="bucketed_plan",
             collective=self.collective, axis=self.axis, n=self.n,
             cols=self.cols, dtype=self.dtype,
             buckets=list(self.buckets), pad_strategy=self.pad_strategy,
@@ -394,10 +445,11 @@ class BucketedPlan:
         ), **json_kw)
 
     @classmethod
-    def from_json(cls, s: str) -> "BucketedPlan":
+    def from_json(cls, s: str, *, verify: str = "strict") -> "BucketedPlan":
+        """Rebuild a bucket family; every per-bucket program is
+        verified on load (``verify='off'|'warn'|'strict'``)."""
         d = json.loads(s)
-        if d.get("format") != PLAN_FORMAT_VERSION:
-            raise ValueError(f"unsupported plan format {d.get('format')!r}")
+        _check_version(d, "BucketedPlan")
         if d.get("kind") != "bucketed_plan":
             raise ValueError(
                 f"not a bucketed plan payload (kind={d.get('kind')!r}); "
@@ -406,16 +458,19 @@ class BucketedPlan:
             raise ValueError(
                 f"unknown pad_strategy {d.get('pad_strategy')!r}; "
                 f"expected one of 'rows', 'tiled', 'blocks'")
-        buckets = tuple(int(b) for b in d["buckets"])
-        missing = [b for b in buckets if str(b) not in d["plans"]]
+        req = lambda k: _field(d, k, "BucketedPlan")  # noqa: E731
+        buckets = tuple(int(b) for b in req("buckets"))
+        payload_plans = req("plans")
+        missing = [b for b in buckets if str(b) not in payload_plans]
         if missing:
             raise ValueError(f"bucketed plan payload missing buckets "
-                             f"{missing} (has {sorted(d['plans'])})")
-        plans = {b: ExecutionPlan.from_dict(d["plans"][str(b)])
+                             f"{missing} (has {sorted(payload_plans)})")
+        plans = {b: ExecutionPlan.from_dict(payload_plans[str(b)],
+                                            verify=verify)
                  for b in buckets}
         return cls(
-            collective=d["collective"], axis=d["axis"], n=d["n"],
-            cols=d["cols"], dtype=d["dtype"], buckets=buckets,
+            collective=req("collective"), axis=req("axis"), n=req("n"),
+            cols=req("cols"), dtype=req("dtype"), buckets=buckets,
             plans=plans,
             hits={b: int(d.get("hits", {}).get(str(b), 0)) for b in buckets},
             pad_strategy=d["pad_strategy"])
@@ -435,16 +490,27 @@ class Communicator:
                  link: sel.LinkModel = sel.ICI,
                  table: Optional[sel.TuningTable] = None,
                  backend: Optional[str] = None,
-                 opt_level: Optional[int] = None):
+                 opt_level: Optional[int] = None,
+                 verify: str = "strict"):
+        if verify not in verify_mod.MODES:
+            raise ValueError(
+                f"verify must be one of {verify_mod.MODES}, got {verify!r}")
         self.axis = axis
         self.n = n
         self.link = link
         self.table = table
         self.backend = backend
         self.opt_level = opt_level
+        self.verify = verify
         self._plans: Dict[tuple, ExecutionPlan] = {}
         self._bucketed: Dict[tuple, BucketedPlan] = {}
         self.stats = {"compiles": 0, "hits": 0}
+        #: robustness counters (surfaced through Engine.plan_report):
+        #: programs verified clean / verification failures seen /
+        #: recompile-once degradations after a failure / pallas->xla
+        #: backend fallbacks
+        self.health = {"verified": 0, "verify_failures": 0,
+                       "recompiles": 0, "fallbacks": 0}
 
     # -- configuration -----------------------------------------------------
     def set_tuning_table(self, table: Optional[sel.TuningTable]) -> None:
@@ -630,6 +696,37 @@ class Communicator:
                                      self.table, level)
                 source = algos.REGISTRY[name](n)
                 prog = passes.optimize(source, level, n)
+
+        # static verification (compile-time only — the replay hot path
+        # executes the verified artifact with zero added work). On a
+        # verifier failure the cached optimized form is abandoned and
+        # the plan recompiles ONCE unoptimized (O0 = the hand-written
+        # source); only if that still fails does strict mode raise.
+        if self.verify != "off":
+            vroot = root if collective == "broadcast" else 0
+            report = verify_mod.verify_program(
+                prog, n, collective=collective, root=vroot)
+            if report.findings and level > 0:
+                self.health["verify_failures"] += 1
+                self.health["recompiles"] += 1
+                warnings.warn(
+                    f"plan verification failed at O{level} for "
+                    f"{collective}/{name} (n={n}): {report.findings[0]} "
+                    f"— recompiling unoptimized", stacklevel=3)
+                level = 0
+                prog = passes.optimize(source, level, n)
+                report = verify_mod.verify_program(
+                    prog, n, collective=collective, root=vroot)
+            if report.findings:
+                self.health["verify_failures"] += 1
+                if self.verify == "strict":
+                    report.raise_if_failed()
+                warnings.warn(
+                    f"plan verification: {report.summary()} — serving "
+                    f"unverified (verify='warn')", stacklevel=3)
+            else:
+                self.health["verified"] += 1
+
         n_in = prog.chunks[prog.in_buffer]
         pad = (-rows) % n_in if collective in _PADDABLE else 0
         if pad == 0 and rows % n_in != 0:
@@ -642,8 +739,23 @@ class Communicator:
         est = link.time_us(
             stats["comm_rounds"] + stats["barriers"], stats[bytes_key],
             extra_syncs=max(0, stats["sync_steps"] - stats["comm_rounds"]))
-        executor = _build_executor(prog, self.axis, collective, backend,
-                                   level, n)
+        try:
+            executor = _build_executor(prog, self.axis, collective, backend,
+                                       level, n)
+        except Exception as e:
+            if backend != "pallas":
+                raise
+            # graceful degradation: the pallas lowering is the
+            # paper-faithful fast path, the xla lowering runs the same
+            # verified program — serve on it rather than fail
+            self.health["fallbacks"] += 1
+            warnings.warn(
+                f"pallas lowering failed for {collective}/{name} "
+                f"(n={n}): {e} — falling back to the xla backend",
+                stacklevel=3)
+            backend = "xla"
+            executor = _build_executor(prog, self.axis, collective, backend,
+                                       level, n)
         return ExecutionPlan(
             collective=collective, algo=name, axis=self.axis, n=n,
             shape=(rows, cols), dtype=dtype, backend=backend,

@@ -441,7 +441,19 @@ def program_to_dict(p: Program) -> dict:
 
 def program_from_dict(d: dict) -> Program:
     """Rebuild a frozen ``Program`` from ``program_to_dict`` output,
-    preserving round structure and optimizer multi-chunk forms."""
+    preserving round structure and optimizer multi-chunk forms. A
+    truncated or hand-edited payload raises ``ValueError`` naming the
+    broken field instead of a raw ``KeyError``."""
+    try:
+        return _program_from_dict(d)
+    except (KeyError, TypeError, IndexError) as e:
+        raise ValueError(
+            f"malformed program payload ({type(e).__name__}: {e}): "
+            f"missing or corrupted field — not program_to_dict output, "
+            f"or a truncated plan file") from e
+
+
+def _program_from_dict(d: dict) -> Program:
     p = Program.__new__(Program)
     p.name = d["name"]
     p.chunks = dict(d["chunks"])

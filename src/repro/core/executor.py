@@ -328,6 +328,10 @@ class XlaExecutor:
 
     # -- entry point ---------------------------------------------------------
     def __call__(self, x: jax.Array) -> jax.Array:
+        from repro.core import faults
+        inj = faults.active()
+        if inj is not None:       # chaos harness hook (trace time only)
+            x = inj.on_execute(x)
         p = self.program
         axis = self.axis
         n = compat.axis_size(axis)
@@ -606,8 +610,12 @@ class PallasExecutor:
         prim.device_barrier(bar_sem, axis)  # exit barrier (see kernels/)
 
     def __call__(self, x: jax.Array) -> jax.Array:
+        from repro.core import faults
         from repro.kernels import comm_utils
 
+        inj = faults.active()
+        if inj is not None:       # chaos harness hook (trace time only)
+            x = inj.on_execute(x)
         p = self.program
         interpret = (comm_utils.interpret_mode() if self.interpret is None
                      else self.interpret)

@@ -11,17 +11,31 @@ the TP axis and compiles the decode-step collective plans at __init__
 AllGather, **bucketed** over active-slot counts
 (:func:`~repro.distributed.step.compile_decode_plans`), so a
 continuous-batching stack with varying slot occupancy replays a
-handful of plans instead of compiling per distinct shape.
+handful of plans instead of compiling per distinct shape. Every
+program is statically verified at compilation (``ServeConfig.verify``,
+see :mod:`repro.core.verify`).
 
 With ``mode="explicit"`` the decode step itself is the explicit-TP
 shard_map path (:func:`~repro.distributed.step.make_serve_step`): every
 generated token REPLAYS those init-compiled plans on the hot path —
 compile counters stay flat across decode calls. ``mode="auto"`` keeps
 the GSPMD baseline (XLA-inserted psum); the plans then remain the
-cost/inspection artifact. When explicit mode is unavailable (family /
-divisibility / jax capability), the engine warns and falls back to
-auto. ``plan_report()`` exposes per-bucket cost cards and dispatch hit
-counts before (and while) serving.
+cost/inspection artifact.
+
+Runtime guardrails (the fallback ladder, docs/robustness.md): every
+step call is guarded — transient executor failures retry with bounded
+exponential backoff; an optional watchdog (``plan_timeout_s``) bounds
+each step's wall clock; an optional numeric guard
+(``guard_numerics``) rejects non-finite logits; and any unrecovered
+explicit-path failure — including plan-verification failures and
+bucket-overflow errors at trace time — degrades the engine to the
+auto (GSPMD) path and re-runs the step there, so serving continues on
+the safe path rather than crashing or emitting wrong tokens. Health
+counters (``verified``, ``retries``, ``fallbacks``,
+``faults_detected``) are surfaced through ``plan_report()``. The
+guards add **zero per-token work on the replay hot path** when the
+watchdog and numeric guard are off (the default): the guarded call is
+a plain ``step_fn`` invocation inside a try/except.
 
 The engine supports continuous-batching-lite: a fixed slot count,
 per-slot position counters, and slot recycling when a sequence emits
@@ -29,7 +43,9 @@ EOS.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import time
 import warnings
 from typing import Optional
 
@@ -38,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import comm as comm_lib
+from repro.core import faults
 from repro.distributed import sharding as shd
 from repro.distributed.step import (compile_decode_plans, local_batch,
                                     make_serve_step)
@@ -55,6 +72,12 @@ class ServeConfig:
     temperature: float = 0.0       # 0 -> greedy
     mode: str = "auto"             # 'auto' (GSPMD) | 'explicit' (plan replay)
     kv_quant: bool = False         # int8 KV cache with per-token scales
+    # -- robustness knobs (docs/robustness.md) -----------------------------
+    verify: str = "strict"         # plan verification: 'off'|'warn'|'strict'
+    max_retries: int = 2           # bounded retry on transient step failure
+    retry_backoff_s: float = 0.05  # base of the exponential backoff
+    plan_timeout_s: Optional[float] = None   # per-step watchdog (None = off)
+    guard_numerics: bool = False   # reject non-finite logits, redo on auto
 
 
 class Engine:
@@ -65,45 +88,153 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
+        self.ax = ax
         self.scfg = serve_cfg
         mode = mode if mode is not None else serve_cfg.mode
         if mode not in ("auto", "explicit"):
             raise ValueError(f"unknown serve mode {mode!r}")
+        #: runtime guardrail counters; plan_report() merges these with
+        #: the communicator's compile-side health (verified, recompiles)
+        self.health = {"retries": 0, "fallbacks": 0, "faults_detected": 0,
+                       "timeouts": 0}
+        # exact-replay recovery (re-running a detected-bad step from its
+        # pre-step state) needs the inputs alive after the call, so the
+        # detecting guards disable donation; the default path keeps it
+        self._donate = not (serve_cfg.guard_numerics
+                            or serve_cfg.plan_timeout_s is not None)
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
 
         # -- compile-once planning (§5.2): TP communicator + bucketed
         # decode plans, BEFORE the step function so explicit mode replays
-        # exactly these artifacts
+        # exactly these artifacts. Every program is verified here —
+        # compile time — so the replay hot path carries no checking.
         tp = int(mesh.shape.get(ax.model, 1))
         self.comm = comm if comm is not None else comm_lib.Communicator(
-            ax.model, n=tp, backend=comm_lib.default_backend())
+            ax.model, n=tp, backend=comm_lib.default_backend(),
+            verify=serve_cfg.verify)
         b_local, _ = local_batch(mesh, ax, serve_cfg.batch)
         self.decode_plans: dict = {}
+        plan_err: Optional[Exception] = None
         if tp > 1:
-            self.decode_plans = compile_decode_plans(
-                cfg, self.comm, batch_local=b_local, tp=tp)
+            try:
+                self.decode_plans = compile_decode_plans(
+                    cfg, self.comm, batch_local=b_local, tp=tp)
+            except Exception as e:   # verification / compile failure
+                plan_err = e
+                warnings.warn(
+                    f"decode-plan compilation failed ({e}); serving "
+                    f"without plan artifacts", stacklevel=2)
 
         self.mode = mode
         if mode == "explicit":
-            try:
-                self.step_fn, _ = make_serve_step(
-                    cfg, mesh, ax, batch=serve_cfg.batch,
-                    max_kv=serve_cfg.max_kv, donate=True, mode="explicit",
-                    kv_quant=serve_cfg.kv_quant, comm=self.comm)
-            except (NotImplementedError, ValueError) as e:
+            if plan_err is not None:
                 warnings.warn(
-                    f"mode='explicit' unavailable ({e}); falling back to "
-                    f"auto (GSPMD) decode", stacklevel=2)
+                    f"mode='explicit' unavailable (plan compilation "
+                    f"failed: {plan_err}); falling back to auto (GSPMD) "
+                    f"decode", stacklevel=2)
+                self.health["fallbacks"] += 1
                 self.mode = "auto"
+            else:
+                try:
+                    self.step_fn = self._build_step("explicit")
+                except (NotImplementedError, ValueError) as e:
+                    warnings.warn(
+                        f"mode='explicit' unavailable ({e}); falling back "
+                        f"to auto (GSPMD) decode", stacklevel=2)
+                    self.health["fallbacks"] += 1
+                    self.mode = "auto"
         if self.mode == "auto":
-            self.step_fn, _ = make_serve_step(
-                cfg, mesh, ax, batch=serve_cfg.batch,
-                max_kv=serve_cfg.max_kv, donate=True,
-                kv_quant=serve_cfg.kv_quant)
+            self.step_fn = self._build_step("auto")
         self.cache = tf.init_cache(
             cfg, serve_cfg.batch, serve_cfg.max_kv,
             dtype=jnp.int8 if serve_cfg.kv_quant else None)
         self.pos = 0
         self.active = np.zeros(serve_cfg.batch, bool)
+
+    def _build_step(self, mode: str):
+        kw = dict(comm=self.comm) if mode == "explicit" else {}
+        fn, _ = make_serve_step(
+            self.cfg, self.mesh, self.ax, batch=self.scfg.batch,
+            max_kv=self.scfg.max_kv, donate=self._donate, mode=mode,
+            kv_quant=self.scfg.kv_quant, **kw)
+        return fn
+
+    # -- guarded execution (the runtime half of the robustness layer) ------
+    def _dispatch(self, args):
+        """One step_fn call, under the watchdog when configured. The
+        un-watched path is a plain call: zero added per-token work.
+        The watchdog arms only in explicit mode — ``plan_timeout_s``
+        bounds *plan replay*; the auto (GSPMD) path has no plan to
+        watch, and its first trace after a fallback may legitimately
+        take longer than any replay budget."""
+        if self.scfg.plan_timeout_s is None or self.mode != "explicit":
+            return self.step_fn(*args)
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        fut = self._pool.submit(
+            lambda: jax.block_until_ready(self.step_fn(*args)))
+        try:
+            return fut.result(timeout=self.scfg.plan_timeout_s)
+        except concurrent.futures.TimeoutError:
+            # abandon the stalled worker: a fresh pool serves the next
+            # step so the recovery path never queues behind the stall
+            self._pool.shutdown(wait=False)
+            self._pool = None
+            raise TimeoutError(
+                f"decode step exceeded plan_timeout_s="
+                f"{self.scfg.plan_timeout_s}") from None
+
+    def _run_step(self, tokens):
+        """step_fn with the guardrail ladder: bounded retry with
+        exponential backoff for transient failures; watchdog timeout,
+        numeric guard, and structural plan failures degrade to the
+        auto path and re-run the step there."""
+        args = (self.params, self.cache, tokens, jnp.int32(self.pos))
+        attempt = 0
+        while True:
+            try:
+                logits, cache = self._dispatch(args)
+            except (faults.FaultInjected, RuntimeError) as e:
+                if attempt < self.scfg.max_retries:
+                    attempt += 1
+                    self.health["retries"] += 1
+                    time.sleep(self.scfg.retry_backoff_s
+                               * (2 ** (attempt - 1)))
+                    continue
+                return self._fallback_to_auto(
+                    f"transient failure persisted through "
+                    f"{attempt} retries: {e}", args)
+            except TimeoutError as e:
+                self.health["timeouts"] += 1
+                self.health["faults_detected"] += 1
+                return self._fallback_to_auto(str(e), args)
+            except (ValueError, NotImplementedError) as e:
+                # structural plan failure at trace time: verification,
+                # bucket overflow, shape/dtype guards
+                return self._fallback_to_auto(f"plan failure: {e}", args)
+            if self.scfg.guard_numerics:
+                if not bool(jnp.isfinite(logits).all()):
+                    self.health["faults_detected"] += 1
+                    return self._fallback_to_auto(
+                        "non-finite logits (corrupted step output)", args)
+            return logits, cache
+
+    def _fallback_to_auto(self, reason: str, args):
+        """Graceful degradation: rebuild the step on the auto (GSPMD)
+        path and re-run the failed step from its pre-step state. The
+        auto jit's in_shardings reshard the existing cache, so serving
+        continues in place."""
+        if self.mode == "auto":
+            raise RuntimeError(
+                f"decode step failed on the auto (GSPMD) path — no "
+                f"further fallback: {reason}")
+        warnings.warn(
+            f"explicit decode step failed ({reason}); falling back to "
+            f"auto (GSPMD) for the remainder of serving", stacklevel=3)
+        self.health["fallbacks"] += 1
+        self.mode = "auto"
+        self.step_fn = self._build_step("auto")
+        return self._dispatch(args)
 
     def plan_report(self) -> dict:
         """Per-bucket cost cards + dispatch hit counts of the decode-step
@@ -113,7 +244,10 @@ class Engine:
         out-proj), or 1 AllReduce + 2 EP all_to_alls (MoE: out-proj +
         dispatch/combine), plus the embedding gather-reduce and final
         logits gather. The int8 KV cache adds no collective (see
-        ``compile_decode_plans``)."""
+        ``compile_decode_plans``). ``health`` merges the runtime
+        guardrail counters with the communicator's compile-side ones
+        (verified programs, verification failures, recompile-once
+        degradations, backend+mode fallbacks)."""
         def top_plan(p):
             return p.plans[p.buckets[-1]] if isinstance(
                 p, comm_lib.BucketedPlan) else p
@@ -144,8 +278,14 @@ class Engine:
         if a2a is not None:
             # EP dispatch + combine all_to_all per MoE layer
             per_tok += 2 * self.cfg.n_layers * top_plan(a2a).estimate_us
+        health = dict(self.health)
+        health["verified"] = self.comm.health["verified"]
+        health["verify_failures"] = self.comm.health["verify_failures"]
+        health["recompiles"] = self.comm.health["recompiles"]
+        health["fallbacks"] += self.comm.health["fallbacks"]
         return dict(mode=self.mode, plans=cards,
                     predicted_comm_us_per_token=round(per_tok, 2),
+                    health=health,
                     communicator=repr(self.comm))
 
     # -- prefill: feed prompts token-by-token through the decode path ------
@@ -157,9 +297,8 @@ class Engine:
         assert b == self.scfg.batch
         logits = None
         for t in range(plen):
-            logits, self.cache = self.step_fn(
-                self.params, self.cache,
-                jnp.asarray(prompts[:, t], jnp.int32), jnp.int32(self.pos))
+            logits, self.cache = self._run_step(
+                jnp.asarray(prompts[:, t], jnp.int32))
             self.pos += 1
         self.active[:] = True
         return logits
@@ -182,7 +321,6 @@ class Engine:
             out.append(np.asarray(tok))
             done = out[-1] == self.scfg.eos_id
             self.active &= ~done
-            logits, self.cache = self.step_fn(
-                self.params, self.cache, tok, jnp.int32(self.pos))
+            logits, self.cache = self._run_step(tok)
             self.pos += 1
         return np.stack(out, axis=1)

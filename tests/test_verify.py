@@ -1,0 +1,323 @@
+"""Static plan verifier: the whole registry verifies clean at every
+opt level, every injected static fault class is rejected, handcrafted
+bad programs produce the right finding codes, and the Communicator /
+plan-file integration (recompile-once, health counters, schema-version
+and missing-field errors, bucket-overflow message) holds."""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithms as algos
+from repro.core import api, faults, passes
+from repro.core import verify as V
+from repro.core.comm import PLAN_FORMAT_VERSION, Communicator, ExecutionPlan
+from repro.core.dsl import PEER, Program
+
+#: registry algorithm -> the collective whose semantics it must compute
+COLLECTIVE_OF = {
+    "allpairs_rs": "reduce_scatter", "ring_rs": "reduce_scatter",
+    "allpairs_ag": "all_gather", "ring_ag": "all_gather",
+    "allreduce_1pa": "all_reduce", "allreduce_2pa": "all_reduce",
+    "allreduce_ring": "all_reduce", "alltoall": "all_to_all",
+    "broadcast_allpairs": "broadcast",
+}
+
+
+def _build(name, n):
+    build = algos.REGISTRY[name]
+    return build(n, 0) if name == "broadcast_allpairs" else build(n)
+
+
+# --------------------------------------------------------------------------
+# property: the registry is clean, mutations of it are not
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(algos.REGISTRY))
+@pytest.mark.parametrize("level", [0, 2, 3])
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_registry_verifies_clean(name, level, n):
+    """Every algorithm x opt level x size passes all checks, including
+    the per-collective semantic specification."""
+    prog = passes.optimize(_build(name, n), level, n)
+    report = V.verify_program(prog, n, collective=COLLECTIVE_OF[name])
+    assert report.ok, report.summary() + "\n" + "\n".join(
+        str(f) for f in report.findings[:5])
+    assert "semantics" in report.checks
+
+
+@pytest.mark.parametrize("kind", faults.STATIC_KINDS)
+def test_every_static_fault_kind_is_rejected(kind):
+    """Mutation check: each static fault class injected anywhere in the
+    registry must produce findings (sampled here; the exhaustive matrix
+    runs in scripts/check.sh --chaos)."""
+    rejected = 0
+    for name in sorted(algos.REGISTRY):
+        for n in (2, 4):
+            prog = passes.optimize(_build(name, n), 2, n)
+            for seed in (0, 1):
+                try:
+                    bad = faults.inject_program(
+                        prog, faults.FaultSpec(kind, seed=seed), n)
+                except ValueError:
+                    continue    # no such instruction in this program
+                report = V.verify_program(bad, n,
+                                          collective=COLLECTIVE_OF[name])
+                assert not report.ok, (
+                    f"verifier missed {kind} in {name} n={n} seed={seed}")
+                rejected += 1
+    assert rejected > 0, f"{kind} was never injectable"
+
+
+def test_optimized_mutation_not_masked_by_semantics_gate():
+    """A mutated program must fail even when only sync/hazard checks can
+    see it (collective=None: no semantic spec to fall back on)."""
+    prog = passes.optimize(_build("allreduce_ring", 4), 2, 4)
+    bad = faults.inject_program(prog, faults.FaultSpec("drop_put"), 4)
+    assert not V.verify_program(bad, 4).ok
+
+
+# --------------------------------------------------------------------------
+# handcrafted programs: one per finding code
+# --------------------------------------------------------------------------
+def _codes(prog, n=2, **kw):
+    return {f.code for f in V.verify_program(prog, n, **kw).findings}
+
+
+def test_clean_exchange_program():
+    p = Program("exchange", {"input": 1, "output": 1})
+    with p.round():
+        p.put(("input", 0), ("output", 0), PEER(1))
+    with p.round():
+        p.wait(("output", 0), PEER(-1))
+    assert V.verify_program(p.freeze(), 2).ok
+
+
+def test_unmatched_wait():
+    p = Program("waiter", {"input": 1, "output": 1})
+    with p.round():
+        p.wait(("output", 0), PEER(-1))
+    assert "unmatched-wait" in _codes(p.freeze())
+
+
+def test_signal_imbalance_on_unwaited_put():
+    p = Program("pusher", {"input": 1, "output": 1})
+    with p.round():
+        p.put(("input", 0), ("output", 0), PEER(1))
+    assert "signal-imbalance" in _codes(p.freeze())
+
+
+def test_deadlock_wait_before_put():
+    p = Program("inverted", {"input": 1, "output": 1})
+    with p.round():
+        p.wait(("output", 0), PEER(-1))
+    with p.round():
+        p.put(("input", 0), ("output", 0), PEER(1))
+    assert "deadlock" in _codes(p.freeze())
+
+
+def test_hazard_read_races_delivery():
+    p = Program("racy", {"input": 1, "output": 1, "scratch": 1})
+    with p.round():
+        p.put(("input", 0), ("output", 0), PEER(1))
+    with p.round():
+        # read the landing chunk with no wait ordering the delivery
+        p.local_copy(("scratch", 0), ("output", 0))
+    assert "hazard" in _codes(p.freeze())
+
+
+def test_barrier_orders_delivery_instead_of_wait():
+    p = Program("barriered", {"input": 1, "output": 1, "scratch": 1})
+    with p.round():
+        p.put(("input", 0), ("output", 0), PEER(1))
+    with p.round():
+        p.barrier()
+    with p.round():
+        p.local_copy(("scratch", 0), ("output", 0))
+    codes = _codes(p.freeze())
+    assert "hazard" not in codes         # barrier separates put and read
+    assert "signal-imbalance" in codes   # ...but the signal still dangles
+
+
+def test_uninit_scratch_flows_to_output():
+    p = Program("uninit", {"input": 1, "output": 1, "scratch": 1})
+    with p.round():
+        p.local_copy(("output", 0), ("scratch", 0))
+    assert "uninit" in _codes(p.freeze())
+
+
+def test_conservation_output_never_produced():
+    p = Program("noop", {"input": 1, "output": 1})
+    assert "conservation" in _codes(p.freeze())
+
+
+def test_conservation_output_produced_twice():
+    p = Program("double", {"input": 1, "output": 1})
+    with p.round():
+        p.local_copy(("output", 0), ("input", 0))
+        p.local_copy(("output", 0), ("input", 0))
+    assert "conservation" in _codes(p.freeze())
+
+
+def test_semantics_wrong_collective_spec():
+    """A correct broadcast is NOT an all_reduce: initialized, conserved,
+    deadlock-free — only the semantics check can reject it."""
+    prog = _build("broadcast_allpairs", 4)
+    assert V.verify_program(prog, 4, collective="broadcast").ok
+    codes = {f.code
+             for f in V.verify_program(prog, 4,
+                                       collective="all_reduce").findings}
+    assert codes == {"semantics"}
+
+
+def test_structure_unknown_buffer_and_index_range():
+    p = Program("bad_buf", {"input": 1, "output": 1})
+    with p.round():
+        p.put(("bogus", 0), ("output", 0), PEER(1))
+    assert "unknown-buffer" in _codes(p.freeze())
+
+    q = Program("bad_idx", {"input": 1, "output": 1})
+    with q.round():
+        q.put(("input", 5), ("output", 0), PEER(1))
+    assert "index-range" in _codes(q.freeze())
+
+
+def test_check_modes():
+    p = Program("waiter", {"input": 1, "output": 1})
+    with p.round():
+        p.wait(("output", 0), PEER(-1))
+    p.freeze()
+    assert V.check(p, 2, mode="off") is None
+    with pytest.warns(UserWarning, match="unmatched-wait"):
+        report = V.check(p, 2, mode="warn")
+    assert not report.ok
+    with pytest.raises(V.VerificationError, match="unmatched-wait"):
+        V.check(p, 2, mode="strict")
+    with pytest.raises(ValueError, match="verify mode"):
+        V.check(p, 2, mode="loud")
+
+
+# --------------------------------------------------------------------------
+# Communicator integration: health counters + recompile-once
+# --------------------------------------------------------------------------
+def test_communicator_verifies_by_default():
+    comm = Communicator("v", n=4, backend="xla")
+    comm.compile("all_reduce", (8, 16), jnp.float32)
+    assert comm.health["verified"] == 1
+    assert comm.health["verify_failures"] == 0
+    # cache hit: no re-verification
+    comm.compile("all_reduce", (8, 16), jnp.float32)
+    assert comm.health["verified"] == 1
+
+
+def test_recompile_once_on_miscompiling_pass(monkeypatch):
+    """A pass bug at O2 is caught; the plan recompiles at O0 (the
+    hand-written source) and serves verified."""
+    real_optimize = passes.optimize
+
+    def buggy_optimize(prog, level, n):
+        out = real_optimize(prog, level, n)
+        if level > 0:
+            out = faults.inject_program(out, faults.FaultSpec("drop_put"), n)
+        return out
+
+    monkeypatch.setattr(passes, "optimize", buggy_optimize)
+    comm = Communicator("v", n=4, backend="xla")
+    with pytest.warns(UserWarning, match="recompiling unoptimized"):
+        plan = comm.compile("all_reduce", (8, 16), jnp.float32, opt_level=2)
+    assert plan.opt_level == 0
+    assert comm.health["recompiles"] == 1
+    assert comm.health["verified"] == 1
+
+
+def test_strict_raises_when_source_is_bad(monkeypatch):
+    real_optimize = passes.optimize
+    monkeypatch.setattr(
+        passes, "optimize",
+        lambda prog, level, n: faults.inject_program(
+            real_optimize(prog, level, n), faults.FaultSpec("skip_wait"), n))
+    comm = Communicator("v", n=4, backend="xla")
+    with pytest.warns(UserWarning, match="recompiling unoptimized"):
+        with pytest.raises(V.VerificationError):
+            comm.compile("all_reduce", (8, 16), jnp.float32, opt_level=2)
+    comm_warn = Communicator("v", n=4, backend="xla", verify="warn")
+    with pytest.warns(UserWarning, match="unverified"):
+        comm_warn.compile("all_reduce", (8, 16), jnp.float32, opt_level=2)
+    assert comm_warn.health["verify_failures"] >= 1
+
+
+def test_communicator_rejects_bad_verify_mode():
+    with pytest.raises(ValueError, match="verify"):
+        Communicator("v", n=4, backend="xla", verify="sometimes")
+
+
+# --------------------------------------------------------------------------
+# plan files: verified on load, actionable schema errors
+# --------------------------------------------------------------------------
+def _plan(comm=None):
+    comm = comm or Communicator("v", n=4, backend="xla")
+    return comm.compile("all_reduce", (8, 16), jnp.float32)
+
+
+def test_from_json_verifies_loaded_program():
+    d = _plan().to_dict()
+    # corrupt the serialized program the way a truncated plan file
+    # would: keep only the first half of the instruction stream
+    instrs = d["program"]["instructions"]
+    d["program"]["instructions"] = instrs[:len(instrs) // 2]
+    with pytest.raises(V.VerificationError):
+        ExecutionPlan.from_json(json.dumps(d))
+    # verify="off" restores the old trust-the-file behavior
+    ExecutionPlan.from_json(json.dumps(d), verify="off")
+
+
+def test_plan_payload_version_field():
+    d = _plan().to_dict()
+    assert d["version"] == PLAN_FORMAT_VERSION
+    assert d["format"] == PLAN_FORMAT_VERSION   # pre-PR-6 readers
+    bad = {k: v for k, v in d.items() if k not in ("version", "format")}
+    with pytest.raises(ValueError, match="no schema 'version' field"):
+        ExecutionPlan.from_dict(bad)
+    with pytest.raises(ValueError, match="unsupported plan format"):
+        ExecutionPlan.from_dict(dict(d, version=99))
+
+
+def test_plan_payload_missing_field_is_actionable():
+    d = _plan().to_dict()
+    del d["algo"]
+    with pytest.raises(ValueError, match="missing required field 'algo'"):
+        ExecutionPlan.from_dict(d)
+    d2 = _plan().to_dict()
+    d2["program"]["instructions"][0].pop("op")
+    with pytest.raises(ValueError, match="malformed program payload"):
+        ExecutionPlan.from_dict(d2)
+    d3 = _plan().to_dict()
+    d3["link"] = {"bogus_key": 1}
+    with pytest.raises(ValueError, match="malformed 'link'"):
+        ExecutionPlan.from_dict(d3)
+
+
+def test_load_plan_dispatches_and_verifies(tmp_path):
+    comm = Communicator("v", n=4, backend="xla")
+    plan = comm.compile("all_reduce", (8, 16), jnp.float32)
+    path = tmp_path / "plan.json"
+    path.write_text(plan.to_json())
+    loaded = api.load_plan(path)
+    assert loaded.algo == plan.algo
+    assert api.verify_plan(loaded).ok
+
+    bp = comm.plan_for("all_reduce", (8, 16), jnp.float32, buckets=(4, 8))
+    bpath = tmp_path / "bucketed.json"
+    bpath.write_text(bp.to_json())
+    loaded_bp = api.load_plan(bpath)
+    assert list(loaded_bp.buckets) == [4, 8]
+    assert api.verify_plan(loaded_bp).ok
+
+
+def test_bucket_overflow_error_is_actionable():
+    comm = Communicator("v", n=4, backend="xla")
+    bp = comm.plan_for("all_reduce", (8, 16), jnp.float32, buckets=(4, 8))
+    with pytest.raises(ValueError) as e:
+        bp.bucket_for(9)
+    msg = str(e.value)
+    assert "9" in msg and "[4, 8]" in msg          # shape + bucket list
+    assert "plan_for" in msg and "buckets=" in msg  # the fix
