@@ -1,0 +1,204 @@
+"""Trace-driven profiling section (docs/profiling.md): the
+capture → fit → simulate → tune loop over the collective suite.
+
+* :func:`capture_suite` — compile each (collective, algorithm,
+  opt_level) config at every size through the Communicator and capture
+  a per-instruction timeline (``trace.capture_plan``; host-side, no
+  mesh or jit needed).
+* :func:`profile_points` — the ``run.py --json`` section. Fits a
+  LinkModel from the traces (``sel.fit_from_traces``), validates the
+  simulator per config (replay exactness + fitted-model accuracy
+  against the measured span), checks the what-if O0→O2 *sign* against
+  the measured delta, and generates a :class:`~.selector.TuningTable`
+  from the traces — recording every point where the trace-driven table
+  disagrees with the static selector defaults.
+* :func:`profile_smoke` — seconds-fast subset for
+  ``run.py --profile`` / ``check.sh --profile``.
+
+Everything here runs on the host: captures emulate the lowered
+emission stream on numpy buffers, so the profile section adds no mesh
+or jit time to the bench.
+"""
+import dataclasses
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:  # pragma: no cover
+        sys.path.insert(0, _p)
+
+from repro.core import comm as comm_lib            # noqa: E402
+from repro.core import selector as sel             # noqa: E402
+from repro.core import simulate, trace             # noqa: E402
+
+N = 8
+
+#: (collective, algorithm, opt_level) configs validated at n=8 — two
+#: allreduce algorithms at O2, an unoptimized allpairs (many small
+#: events: exercises the α/sync terms), and a ring allgather.
+CONFIGS = [
+    ("all_reduce", "allreduce_ring", 2),
+    ("all_reduce", "allreduce_2pa", 2),
+    ("reduce_scatter", "allpairs_rs", 0),
+    ("all_gather", "ring_ag", 2),
+]
+
+#: (rows, cols) per-rank float32 payloads: 2 KiB → 2 MiB.
+SIZES = [(64, 8), (1024, 128), (4096, 128)]
+
+
+def _nbytes(t: "trace.Trace") -> int:
+    nb = t.shape[0] * t.cols * np.dtype(t.dtype).itemsize
+    return nb * t.n if t.collective == "all_gather" else nb
+
+
+def capture_suite(configs=CONFIGS, sizes=SIZES) -> list:
+    """One captured trace per (config, size), via the planning layer."""
+    comm = comm_lib.Communicator("x", n=N)
+    traces = []
+    for coll, algo, lvl in configs:
+        for rows, cols in sizes:
+            plan = comm.compile(coll, (rows, cols), jnp.float32,
+                                algo=algo, opt_level=lvl)
+            traces.append(trace.capture_plan(plan))
+    return traces
+
+
+def _validate(traces, link, points) -> dict:
+    """Replay exactness + fitted-model accuracy, per config."""
+    per_config: dict = {}
+    for t in traces:
+        rep = simulate.replay(t)                    # measured services
+        mod = simulate.replay(t, link=link)         # fitted model
+        assert rep.rel_err <= simulate.REPLAY_TOLERANCE, (
+            f"replay drift {rep.rel_err:.3f} > {simulate.REPLAY_TOLERANCE} "
+            f"on {t.algo} O{t.opt_level} {t.shape}")
+        within = mod.rel_err <= simulate.VALIDATION_TOLERANCE
+        cfg = (t.collective, t.algo, t.opt_level)
+        per_config.setdefault(cfg, []).append(mod.rel_err)
+        points.append(dict(
+            bench="profile_validation", collective=t.collective,
+            algo=t.algo, opt_level=t.opt_level, backend=t.backend,
+            nbytes=_nbytes(t), events=len(t.events),
+            measured_us=round(t.span_us, 1),
+            replay_us=round(rep.predicted_us, 1),
+            model_us=round(mod.predicted_us, 1),
+            rel_err=round(mod.rel_err, 3), within_tolerance=bool(within)))
+    validated = []
+    for cfg, errs in per_config.items():
+        errs = sorted(errs)
+        med = errs[len(errs) // 2]
+        if med <= simulate.VALIDATION_TOLERANCE:
+            validated.append(cfg)
+    return dict(per_config=per_config, validated=validated)
+
+
+def _whatif_sign(link, points, *, rows=64, cols=8, repeats=5) -> bool:
+    """Does the simulator predict the SIGN of the measured O0→O2 delta?
+
+    Small payload on the allpairs reduce-scatter: per-event overheads
+    dominate, so O0 (per-chunk puts and waits) must be slower than O2
+    (batched) — both measured and predicted. One emulated span at this
+    payload is within noise of the ~10 µs structural delta, so the
+    measured side is a median over ``repeats`` captures. (At
+    bandwidth-bound sizes the measured sign flips — fine-grained O0
+    puts unblock consumer waits earlier, the overlap O3 chunk-splitting
+    exploits — which the serialized per-rank event model does not yet
+    carry; see ROADMAP "Profiler follow-ons".)"""
+    comm = comm_lib.Communicator("x", n=N)
+
+    def med_span(lvl):
+        plan = comm.compile("reduce_scatter", (rows, cols), jnp.float32,
+                            algo="allpairs_rs", opt_level=lvl)
+        spans = sorted(trace.capture_plan(plan).span_us
+                       for _ in range(repeats))
+        return spans[len(spans) // 2]
+
+    med0 = med_span(0)
+    med2 = med_span(2)
+    t2 = trace.capture_plan(comm.compile(
+        "reduce_scatter", (rows, cols), jnp.float32,
+        algo="allpairs_rs", opt_level=2))
+    w0 = simulate.whatif(t2, opt_level=0, link=link)
+    w2 = simulate.whatif(t2, opt_level=2, link=link)
+    measured_delta = med0 - med2
+    predicted_delta = w0.predicted_us - w2.predicted_us
+    sign_ok = (predicted_delta > 0) == (measured_delta > 0)
+    points.append(dict(
+        bench="profile_whatif_sign", collective="reduce_scatter",
+        algo="allpairs_rs", nbytes=rows * cols * 4, repeats=repeats,
+        measured_O0_us=round(med0, 1),
+        measured_O2_us=round(med2, 1),
+        predicted_O0_us=round(w0.predicted_us, 1),
+        predicted_O2_us=round(w2.predicted_us, 1),
+        measured_delta_us=round(measured_delta, 1),
+        predicted_delta_us=round(predicted_delta, 1),
+        sign_ok=bool(sign_ok)))
+    return sign_ok
+
+
+def _tuning_table(traces, link, points) -> list:
+    """Trace-driven TuningTable vs the static selector defaults."""
+    table = sel.TuningTable.from_traces(traces, link=link)
+    changed = []
+    for coll, nbytes, algo in table.entries:
+        default = sel.choose(coll, n=N, nbytes=nbytes)
+        if default != algo:
+            changed.append(dict(collective=coll, nbytes=nbytes,
+                                default=default, from_traces=algo))
+    points.append(dict(
+        bench="profile_tuning_table",
+        entries=[list(e) for e in table.entries], changed=changed,
+        link=dataclasses.asdict(link)))
+    return changed
+
+
+def profile_points(points: list) -> dict:
+    """Full profile section (``run.py --json``); appends its points to
+    ``points`` and returns a summary."""
+    traces = capture_suite()
+    link = sel.fit_from_traces(traces)
+    val = _validate(traces, link, points)
+    sign_ok = _whatif_sign(link, points)
+    changed = _tuning_table(traces, link, points)
+    return dict(
+        traces=len(traces), configs=len(CONFIGS),
+        validated_configs=len(val["validated"]),
+        validated=[list(c) for c in val["validated"]],
+        whatif_sign_ok=bool(sign_ok), table_changes=len(changed),
+        link=dataclasses.asdict(link))
+
+
+def profile_smoke() -> dict:
+    """Seconds-fast profile check (``run.py --profile`` /
+    ``check.sh --profile``): capture a small ring allreduce trace,
+    replay it within :data:`~.simulate.REPLAY_TOLERANCE`, and build a
+    well-formed trace-driven TuningTable."""
+    comm = comm_lib.Communicator("x", n=N)
+    traces = []
+    for rows, cols in ((64, 8), (256, 16)):
+        plan = comm.compile("all_reduce", (rows, cols), jnp.float32,
+                            algo="allreduce_ring", opt_level=2)
+        traces.append(trace.capture_plan(plan))
+    t = traces[0]
+    rep = simulate.replay(t)
+    assert rep.rel_err <= simulate.REPLAY_TOLERANCE, (
+        f"replay drift {rep.rel_err:.3f} > {simulate.REPLAY_TOLERANCE}")
+    link = sel.fit_from_traces(traces)
+    table = sel.TuningTable.from_traces(traces, link=link)
+    assert table.entries, "from_traces produced an empty table"
+    for coll, nbytes, algo in table.entries:
+        assert isinstance(coll, str) and isinstance(algo, str)
+        assert isinstance(nbytes, int) and nbytes > 0
+    w = simulate.whatif(t, algo="allreduce_2pa", link=link)
+    return dict(
+        events=len(t.events), span_us=round(t.span_us, 1),
+        replay_us=round(rep.predicted_us, 1),
+        replay_rel_err=round(rep.rel_err, 4),
+        link=dataclasses.asdict(link),
+        table_entries=len(table.entries),
+        whatif_2pa_us=round(w.predicted_us, 1))

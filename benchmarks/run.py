@@ -30,6 +30,16 @@ static fault classes must be rejected by the plan verifier, runtime
 fault classes must be detected + recovered by the engine guardrails;
 also records the verifier/recovery overhead point. Wired into
 ``scripts/check.sh --chaos``.
+
+``--profile``: seconds-fast trace-profiler smoke
+(``benchmarks/profile.py``): capture a small ring-allreduce trace,
+replay it within tolerance, fit a LinkModel and build a trace-driven
+TuningTable. Wired into ``scripts/check.sh --profile``.
+
+Every ``--json`` payload (and each point in it) is stamped with the
+git SHA and an ISO timestamp, and a copy is kept under
+``BENCH_history/`` (newest ``_HISTORY_KEEP`` runs) so points remain
+comparable across PRs.
 """
 import json
 import os as _os
@@ -48,6 +58,38 @@ def _write_atomic(path: pathlib.Path, text: str) -> None:
     tmp = path.with_name(path.name + ".tmp")
     tmp.write_text(text)
     _os.replace(tmp, path)
+
+
+#: rolling BENCH_history/ copies kept (newest first by timestamp)
+_HISTORY_KEEP = 50
+
+
+def _stamp_payload(payload: dict) -> dict:
+    """Stamp the payload AND every point with the git SHA + ISO
+    timestamp of this run, so any point pulled out of a historical file
+    still identifies the commit that produced it."""
+    from repro.core.trace import run_meta
+
+    meta = run_meta()
+    payload.update(meta)
+    for p in payload.get("points", []):
+        p.setdefault("git_sha", meta["git_sha"])
+        p.setdefault("created", meta["created"])
+    return meta
+
+
+def _keep_history(out: pathlib.Path, text: str, meta: dict) -> pathlib.Path:
+    """Copy the freshly written payload into ``BENCH_history/`` and
+    prune to the newest ``_HISTORY_KEEP`` (ISO timestamps in the name
+    sort chronologically)."""
+    hist = out.parent / "BENCH_history"
+    hist.mkdir(exist_ok=True)
+    stamp = meta["created"].replace(":", "").replace("+0000", "Z")
+    _write_atomic(hist / f"{out.stem}_{stamp}_{meta['git_sha']}.json", text)
+    kept = sorted(hist.glob(f"{out.stem}_*.json"))
+    for old in kept[:-_HISTORY_KEEP]:
+        old.unlink()
+    return hist
 
 
 def main(argv=None) -> None:
@@ -99,6 +141,19 @@ def main(argv=None) -> None:
               f"{ov['compile_ms_off']}ms); replay overhead "
               f"{ov['replay_overhead_us_per_token']}us/token — chaos OK")
         return
+    if "--profile" in argv:
+        from benchmarks import profile
+
+        s = profile.profile_smoke()
+        print(f"profile_smoke: {s['events']} events span={s['span_us']}us, "
+              f"replay={s['replay_us']}us (rel_err={s['replay_rel_err']}), "
+              f"fitted alpha={s['link']['alpha_us']:.2f}us "
+              f"beta={s['link']['beta_GBps']:.2f}GB/s "
+              f"sync={s['link']['sync_us']:.2f}us "
+              f"torus={s['link']['torus']}, "
+              f"table={s['table_entries']} entries, "
+              f"whatif(2pa)={s['whatif_2pa_us']}us — profile OK")
+        return
     if "--json" in argv:
         from benchmarks import collectives, llm_inference
 
@@ -115,9 +170,16 @@ def main(argv=None) -> None:
         # by construction — verification is compile-time)
         from benchmarks import chaos
         chaos.verifier_overhead_point(payload["points"])
+        # trace-driven profiling: simulator validation + what-if sign +
+        # the trace-generated tuning table vs the selector defaults
+        from benchmarks import profile
+        payload["profile"] = profile.profile_points(payload["points"])
+        meta = _stamp_payload(payload)
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
-        _write_atomic(out, json.dumps(payload, indent=2, default=str) + "\n")
+        text = json.dumps(payload, indent=2, default=str) + "\n"
+        _write_atomic(out, text)
+        hist = _keep_history(out, text, meta)
         geo = payload["geomean_speedup_allpairs"]
 
         def _pt(name):
@@ -133,6 +195,13 @@ def main(argv=None) -> None:
               f"{dec['speedup_explicit']}x, MoE {moe['speedup_explicit']}x, "
               f"hybrid {hyb['speedup_explicit']}x, "
               f"int8-KV {q8['speedup_explicit']}x)")
+        prof = payload["profile"]
+        print(f"profile: {prof['validated_configs']}/{prof['configs']} "
+              f"configs validated, whatif O0->O2 sign "
+              f"{'OK' if prof['whatif_sign_ok'] else 'WRONG'}, "
+              f"{prof['table_changes']} tuning-table changes vs defaults; "
+              f"stamped {meta['git_sha']} {meta['created']}, "
+              f"history at {hist}")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

@@ -1,0 +1,99 @@
+"""Trace profiler + what-if simulator walkthrough (docs/profiling.md).
+
+Capture a per-instruction timeline from a compiled ExecutionPlan, replay
+it through the simulator, fit α/β/sync link constants from the traces,
+ask "what if" questions (different algorithm, different opt_level,
+different link), and generate a trace-driven TuningTable — all
+host-side: no mesh, no jit, seconds-fast.
+
+    python examples/profile_plan.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.core import selector as sel
+from repro.core import simulate, trace
+from repro.core.comm import Communicator
+
+N = 8
+comm = Communicator("x", n=N, backend="xla")
+
+# -- 1. capture: one trace per (collective, size) ---------------------------
+# capture_plan() emulates the plan's lowered emission stream on host
+# buffers with per-event timing — the executed program is untouched
+# (tracing real executions via Communicator(trace=True) records the
+# same Trace from inside jit tracing, again without adding a single
+# instruction).
+traces = []
+for rows, cols in ((64, 8), (1024, 128), (4096, 128)):
+    plan = comm.compile("all_reduce", (rows, cols), jnp.float32,
+                        algo="allreduce_ring", opt_level=2)
+    traces.append(trace.capture_plan(plan))
+t = traces[1]
+print(f"[capture] {t.algo} O{t.opt_level} {t.shape}: "
+      f"{len(t.events)} events, span={t.span_us:.1f}us")
+print(f"[capture] summary: {t.summary()}")
+
+# traces serialize to versioned JSON: save/load round-trips
+rt = trace.Trace.from_json(t.to_json())
+assert abs(rt.span_us - t.span_us) < 1e-3   # serialized at µs 4dp
+assert len(rt.events) == len(t.events)
+print(f"[capture] JSON round-trip OK "
+      f"({len(t.to_json()) // 1024} KiB, schema v{t.version})")
+
+# -- 2. replay: the simulator reproduces the measured span ------------------
+rep = simulate.replay(t)
+print(f"[replay] measured={t.span_us:.1f}us replayed="
+      f"{rep.predicted_us:.1f}us (tolerance "
+      f"{simulate.REPLAY_TOLERANCE:.0%})")
+
+# -- 3. fit: α/β/sync_us and the torus flag from the traces -----------------
+link = sel.fit_from_traces(traces)
+print(f"[fit] {link}")
+mod = simulate.replay(t, link=link)
+print(f"[fit] model replay: {mod.predicted_us:.1f}us "
+      f"(rel_err={mod.rel_err:.2f}, documented tolerance "
+      f"{simulate.VALIDATION_TOLERANCE:.0%})")
+
+# -- 4. what-if: re-plan WITHOUT recompiling or re-running ------------------
+for algo in ("allreduce_2pa", "allreduce_1pa"):
+    w = simulate.whatif(t, algo=algo, link=link)
+    print(f"[whatif] {algo}: predicted {w.predicted_us:.1f}us "
+          f"(ring measured {t.span_us:.1f}us)")
+w0 = simulate.whatif(t, algo="allreduce_1pa", opt_level=0, link=link)
+w2 = simulate.whatif(t, algo="allreduce_1pa", opt_level=2, link=link)
+print(f"[whatif] 1pa O0 {w0.predicted_us:.1f}us ({w0.events} events) vs "
+      f"O2 {w2.predicted_us:.1f}us ({w2.events} events) — "
+      f"sync batching visible without recompiling")
+slow = dataclasses.replace(link, beta_GBps=link.beta_GBps / 10)
+ws = simulate.whatif(t, link=slow)
+print(f"[whatif] 10x slower link: {ws.predicted_us:.1f}us")
+
+# -- 5. tune: a TuningTable generated from the traces -----------------------
+table = sel.TuningTable.from_traces(traces, link=link)
+print(f"[tune] from_traces table: {table.entries}")
+for coll, nbytes, algo in table.entries:
+    default = sel.choose(coll, n=N, nbytes=nbytes)
+    mark = "  <- changed" if default != algo else ""
+    print(f"[tune] {coll} @ {nbytes}B: default={default} "
+          f"traced={algo}{mark}")
+
+# install it exactly like a from_bench table (docs/tuning.md)
+comm2 = Communicator("x", n=N, table=table, link=link)
+plan2 = comm2.compile("all_reduce", (1024, 128), jnp.float32)
+print(f"[tune] tuned communicator picked: {plan2.algo}")
+
+# -- 6. the serving surface -------------------------------------------------
+# Engine(serve_cfg=ServeConfig(trace=True)) flows the flag to its
+# communicator; every decode plan then records a timeline on first
+# replay and plan_report()["trace"] carries the summaries.
+tr_comm = Communicator("x", n=N, trace=True)
+tr_plan = tr_comm.compile("all_reduce", (64, 8), jnp.float32)
+tr = tr_plan.capture_trace()
+print(f"[serve] plan.last_trace: {json.dumps(tr.summary(), default=str)}")

@@ -20,6 +20,10 @@
 #                               # faults rejected by the plan
 #                               # verifier, runtime faults detected +
 #                               # recovered by the engine guardrails
+#   scripts/check.sh --profile  # trace-profiler smoke (seconds-fast,
+#                               # host-only): capture a ring-allreduce
+#                               # trace, replay within tolerance, fit
+#                               # a LinkModel + trace-driven TuningTable
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -28,7 +32,7 @@ run_docs() {
   echo "== doc smoke: docs pages present =="
   for f in README.md docs/architecture.md docs/plan-lifecycle.md \
            docs/dsl.md docs/serving.md docs/tuning.md \
-           docs/robustness.md; do
+           docs/robustness.md docs/profiling.md; do
     [[ -s "$f" ]] || { echo "MISSING: $f" >&2; exit 1; }
   done
   echo "== doc smoke: executing examples/*.py =="
@@ -66,6 +70,11 @@ fi
 if [[ "${1:-}" == "--chaos" ]]; then
   shift
   python benchmarks/run.py --chaos "$@"
+  exit 0
+fi
+if [[ "${1:-}" == "--profile" ]]; then
+  shift
+  python benchmarks/run.py --profile "$@"
   exit 0
 fi
 python -m pytest -x -q "$@"

@@ -1,6 +1,7 @@
 """repro.core — MSCCL++ on TPU: primitives, channels, DSL, optimizer
 passes, executors, algorithm library, selector, the Communicator /
-ExecutionPlan planning layer, and the NCCL-shaped Collective API."""
+ExecutionPlan planning layer, the trace profiler + what-if replay
+simulator, and the NCCL-shaped Collective API."""
 from repro.core import (  # noqa: F401
     algorithms,
     api,
@@ -12,5 +13,7 @@ from repro.core import (  # noqa: F401
     passes,
     primitives,
     selector,
+    simulate,
+    trace,
     verify,
 )

@@ -188,6 +188,12 @@ class ExecutionPlan:
     comm_stats: Dict[str, int]
     program: Program
     executor: Any
+    #: when True (``Communicator(trace=True)``), every execution records
+    #: a per-instruction timeline (``repro.core.trace``), surfaced as
+    #: :attr:`last_trace`. Off by default: the untraced replay path is
+    #: byte-identical with the flag off (jaxpr-asserted in tests).
+    trace: bool = False
+    _trace_box: list = dataclasses.field(default_factory=list, repr=False)
 
     # -- execution ---------------------------------------------------------
     def __call__(self, x: jax.Array) -> jax.Array:
@@ -199,12 +205,33 @@ class ExecutionPlan:
         if np.dtype(x.dtype) != np.dtype(self.dtype):
             raise ValueError(
                 f"plan compiled for dtype {self.dtype}, got {x.dtype}")
+        if self.trace:
+            # capture runs host-side at trace time and adds ZERO
+            # instructions to the traced program (the emulation never
+            # touches x)
+            self.capture_trace()
         if self.pad:
             x = jnp.pad(x, ((0, self.pad), (0, 0)))
         out = self.executor(x)
         if self.pad:
             out = out[: self.shape[0]]
         return out
+
+    # -- profiling ---------------------------------------------------------
+    def capture_trace(self):
+        """Record (and return) a per-instruction timeline of this plan
+        via timed host emulation — no mesh required; see
+        :mod:`repro.core.trace`."""
+        from repro.core import trace as trace_mod
+        tr = trace_mod.capture_plan(self)
+        self._trace_box[:] = [tr]
+        return tr
+
+    @property
+    def last_trace(self):
+        """The most recent :class:`~.trace.Trace` this plan recorded
+        (``None`` until a traced execution or :meth:`capture_trace`)."""
+        return self._trace_box[-1] if self._trace_box else None
 
     # -- inspection --------------------------------------------------------
     def cost_card(self) -> dict:
@@ -411,6 +438,16 @@ class BucketedPlan:
             self.n * rows, cols)
 
     # -- inspection --------------------------------------------------------
+    @property
+    def last_trace(self):
+        """The largest bucket's most recent recorded trace (the full-
+        occupancy timeline; ``None`` until a traced execution)."""
+        return self.plans[self.buckets[-1]].last_trace
+
+    def last_traces(self) -> Dict[int, Any]:
+        """Per-bucket most recent recorded traces (bucket -> Trace|None)."""
+        return {b: self.plans[b].last_trace for b in self.buckets}
+
     def cost_cards(self) -> Dict[int, dict]:
         """Per-bucket cost cards (bucket rows -> card)."""
         return {b: self.plans[b].cost_card() for b in self.buckets}
@@ -491,7 +528,8 @@ class Communicator:
                  table: Optional[sel.TuningTable] = None,
                  backend: Optional[str] = None,
                  opt_level: Optional[int] = None,
-                 verify: str = "strict"):
+                 verify: str = "strict",
+                 trace: bool = False):
         if verify not in verify_mod.MODES:
             raise ValueError(
                 f"verify must be one of {verify_mod.MODES}, got {verify!r}")
@@ -502,6 +540,10 @@ class Communicator:
         self.backend = backend
         self.opt_level = opt_level
         self.verify = verify
+        #: record a per-instruction timeline on every plan execution
+        #: (``ExecutionPlan.last_trace``; see repro.core.trace). Off by
+        #: default — tracing must cost the replay path nothing.
+        self.trace = trace
         self._plans: Dict[tuple, ExecutionPlan] = {}
         self._bucketed: Dict[tuple, BucketedPlan] = {}
         self.stats = {"compiles": 0, "hits": 0}
@@ -762,7 +804,7 @@ class Communicator:
             opt_level=level, requested_opt_level=level_req,
             root=root if collective == "broadcast" else None, pad=pad,
             link=link, estimate_us=est, comm_stats=stats,
-            program=prog, executor=executor)
+            program=prog, executor=executor, trace=self.trace)
 
     def plans(self) -> Dict[tuple, ExecutionPlan]:
         """A snapshot of the plan cache (key -> plan)."""

@@ -326,6 +326,62 @@ class XlaExecutor:
             bufs[db], acc.astype(bufs[db].dtype), di(me, n), axis=0)
         return bufs
 
+    # -- profiling -----------------------------------------------------------
+    def trace_emissions(self, n: int):
+        """The backend-lowered emission stream this executor issues for
+        an ``n``-rank axis (see :mod:`repro.core.trace`): what the
+        vectorized lowering actually emits — one ``all_to_all`` /
+        ``all_gather`` emission per fan-out round, one (stacked)
+        ``ppermute`` per same-shift group — or per-triple ``ppermute``
+        emissions in reference mode. Synchronization instructions erase
+        to data dependence on this backend, so their emissions are
+        labelled ``data_dep``."""
+        from repro.core.trace import Emission
+        p = self.program
+        plan = None
+        if self.vectorize:
+            if self._prepared is not None and self._prepared[0] == n:
+                plan = self._prepared[1]
+            else:
+                plan = _lowering_plan(p, n)
+        out = []
+        for iid, instr in enumerate(p.instructions()):
+            rid = instr.round_id
+            if instr.op is Op.PUT:
+                triples = instr.put_triples()
+                if plan is None:
+                    for sub, t in enumerate(triples):
+                        out.append(Emission(
+                            iid, sub, "put", "ppermute", rid,
+                            shift=t[2].shift() % n, puts=(t,)))
+                    continue
+                action = plan[id(instr)]
+                if action.kind == "a2a":
+                    out.append(Emission(iid, 0, "put", "all_to_all", rid,
+                                        puts=tuple(triples)))
+                elif action.kind == "gather":
+                    out.append(Emission(iid, 0, "put", "all_gather", rid,
+                                        puts=tuple(triples)))
+                else:
+                    for sub, (s, ts) in enumerate(action.groups):
+                        out.append(Emission(
+                            iid, sub, "put",
+                            "stacked_ppermute" if len(ts) > 1 else "ppermute",
+                            rid, shift=s % n, puts=tuple(ts)))
+            elif instr.op is Op.WAIT:
+                out.append(Emission(iid, 0, "wait", "data_dep", rid,
+                                    waits=tuple(instr.wait_chunks())))
+            elif instr.op is Op.BARRIER:
+                out.append(Emission(iid, 0, "barrier", "data_dep", rid))
+            elif instr.op is Op.FLUSH:
+                continue  # no-op on this backend (flushed at issue)
+            elif instr.op in (Op.COPY, Op.REDUCE):
+                out.append(Emission(iid, 0, instr.op.value, "jnp", rid,
+                                    dst=instr.dst, srcs=tuple(instr.srcs)))
+            else:  # pragma: no cover
+                raise NotImplementedError(instr.op)
+        return out
+
     # -- entry point ---------------------------------------------------------
     def __call__(self, x: jax.Array) -> jax.Array:
         from repro.core import faults
@@ -339,6 +395,11 @@ class XlaExecutor:
         n_in = p.chunks[p.in_buffer]
         rows = x.shape[0] // n_in
         cols = x.shape[1]
+        from repro.core import trace as trace_mod
+        col = trace_mod.active()
+        if col is not None:       # profiler hook (trace time only)
+            col.record(self, n=n, chunk_rows=rows, cols=cols,
+                       dtype=np.dtype(x.dtype).name, backend="xla")
         if not self.vectorize:
             plan = None
         elif self._prepared is not None and self._prepared[0] == n:
@@ -497,6 +558,80 @@ class PallasExecutor:
         return sum(len(i.put_triples())
                    for i in self.program.instructions() if i.op is Op.PUT)
 
+    # -- profiling -----------------------------------------------------------
+    def trace_emissions(self, n: int):
+        """The kernel's emission stream at descriptor granularity (see
+        :mod:`repro.core.trace`): one ``dma_slab`` emission per
+        contiguous-slab descriptor, one ``dma`` per per-chunk
+        descriptor, matching ``sem_wait``/``sem_wait_slab`` recv-waits,
+        and ``device_barrier`` emissions — exactly what
+        ``descriptor_count(n)`` counts."""
+        from repro.core.trace import Emission
+        p = self.program
+        if self._prepared is not None and self._prepared[0] == n:
+            _, wait_rounds, put_plan, _ = self._prepared
+        else:
+            wait_rounds = self._wait_put_rounds(n)
+            put_plan = self._put_plan(n)
+        out = []
+        for iid, instr in enumerate(p.instructions()):
+            rid = instr.round_id
+            if instr.op is Op.PUT:
+                sub = 0
+                for shift, triples, slab in put_plan[id(instr)]:
+                    if slab is not None:
+                        out.append(Emission(iid, sub, "put", "dma_slab",
+                                            rid, shift=shift % n,
+                                            puts=tuple(triples)))
+                        sub += 1
+                    else:
+                        for t in triples:
+                            out.append(Emission(iid, sub, "put", "dma",
+                                                rid, shift=shift % n,
+                                                puts=(t,)))
+                            sub += 1
+            elif instr.op is Op.WAIT:
+                # mirror _wait_emissions' slab grouping, but keep the
+                # concrete (chunk, frm) pairs each descriptor covers so
+                # the emulator can resolve wait→put dependencies
+                chunks = instr.wait_chunks()
+                rounds = wait_rounds[id(instr)]
+                sub = 0
+                i = 0
+                while i < len(chunks):
+                    (db, _), _ = chunks[i]
+                    rid_p = rounds[i]
+                    j = i + 1
+                    while j < len(chunks) and rounds[j] == rid_p \
+                            and chunks[j][0][0] == db:
+                        j += 1
+                    run = chunks[i:j]
+                    base = _slab([e for (_, e), _ in run]) \
+                        if len(run) > 1 else None
+                    if base is not None:
+                        out.append(Emission(iid, sub, "wait",
+                                            "sem_wait_slab", rid,
+                                            waits=tuple(run)))
+                        sub += 1
+                    else:
+                        for c in run:
+                            out.append(Emission(iid, sub, "wait",
+                                                "sem_wait", rid,
+                                                waits=(c,)))
+                            sub += 1
+                    i = j
+            elif instr.op is Op.BARRIER:
+                out.append(Emission(iid, 0, "barrier", "device_barrier",
+                                    rid))
+            elif instr.op is Op.FLUSH:
+                continue  # puts are flushed at issue in this executor
+            elif instr.op in (Op.COPY, Op.REDUCE):
+                out.append(Emission(iid, 0, instr.op.value, "vmem", rid,
+                                    dst=instr.dst, srcs=tuple(instr.srcs)))
+            else:  # pragma: no cover
+                raise NotImplementedError(instr.op)
+        return out
+
     # -- static analysis ----------------------------------------------------
     def _wait_put_rounds(self, n: int):
         """Map each WAIT instr (by id) to the rounds of its chunks'
@@ -623,6 +758,12 @@ class PallasExecutor:
         n_out = p.chunks[p.out_buffer]
         rows = x.shape[0] // n_in
         cols = x.shape[1]
+        from repro.core import trace as trace_mod
+        col = trace_mod.active()
+        if col is not None:       # profiler hook (trace time only)
+            col.record(self, n=compat.axis_size(self.axis), chunk_rows=rows,
+                       cols=cols, dtype=np.dtype(x.dtype).name,
+                       backend="pallas")
         scratch_shapes: list[Any] = []
         has_scratch = "scratch" in p.chunks
         if has_scratch:

@@ -18,7 +18,7 @@ from typing import Callable, Optional
 from repro.core import algorithms as algos
 
 __all__ = ["LinkModel", "ICI", "DCN", "estimate_us", "choose", "TuningTable",
-           "CANDIDATES", "fit_link_model"]
+           "CANDIDATES", "fit_link_model", "fit_from_traces"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +91,61 @@ class TuningTable:
         return None
 
     @classmethod
+    def from_traces(cls, traces, *, link: Optional[LinkModel] = None,
+                    opt_level: Optional[int] = None) -> "TuningTable":
+        """Auto-generate a table by **simulating every registry
+        candidate** at each captured (collective, size) point
+        (``repro.core.simulate.whatif``) — the trace-driven successor to
+        :meth:`from_bench`: one capture per size is enough, because the
+        other candidates are predicted, not measured.
+
+        ``link`` defaults to :func:`fit_from_traces` over the same
+        traces, so predictions are grounded in the machine that produced
+        them. Entries follow :meth:`from_bench`'s bracket convention
+        (``max_bytes`` in the units ``choose()`` is queried with;
+        all_gather brackets scaled to the full gathered message).
+        Collectives with a single registry candidate are skipped — no
+        preference information.
+        """
+        import numpy as np
+
+        from repro.core import simulate as sim
+
+        traces = list(traces)
+        if not traces:
+            raise ValueError(
+                "from_traces needs at least one captured trace; record "
+                "one with Communicator(trace=True), "
+                "ExecutionPlan.capture_trace(), or trace.capture(...)")
+        if link is None:
+            link = fit_from_traces(traces)
+        best: dict = {}   # (collective, bracket_bytes) -> (pred_us, algo)
+        for t in traces:
+            cands = CANDIDATES.get(t.collective)
+            if cands is None or len(cands) < 2:
+                continue
+            nbytes = t.shape[0] * t.cols * np.dtype(t.dtype).itemsize
+            if t.collective == "all_gather":
+                nbytes *= t.n
+            key = (t.collective, nbytes)
+            if key in best:
+                continue          # first capture per (collective, size) wins
+            preds = {}
+            for cand in cands:
+                try:
+                    preds[cand] = sim.whatif(
+                        t, algo=cand, link=link,
+                        opt_level=opt_level).predicted_us
+                except ValueError:
+                    continue      # candidate not rebuildable at this geometry
+            if len(preds) < 2:
+                continue
+            algo = min(preds, key=preds.get)
+            best[key] = (preds[algo], algo)
+        entries = [(c, nb, a) for (c, nb), (_, a) in sorted(best.items())]
+        return cls(entries=entries)
+
+    @classmethod
     def from_bench(cls, bench: dict) -> "TuningTable":
         """Build a table from a ``BENCH_collectives.json`` payload: for
         every (collective, size) the ``opt_compare`` section measured,
@@ -104,6 +159,7 @@ class TuningTable:
         the bench measures all_gather on per-shard input buffers, but
         AG selection happens on the full gathered message, so those
         brackets are scaled by the bench's axis size ``n``."""
+        _check_bench_payload(bench, "TuningTable.from_bench")
         coll_of = {a: c for c, cands in CANDIDATES.items() for a in cands}
         n = bench.get("n", 1)
         best: dict = {}   # (collective, nbytes) -> (wall_us, algo)
@@ -126,6 +182,114 @@ class TuningTable:
         return cls(entries=entries)
 
 
+def _check_bench_payload(bench, what: str) -> None:
+    """Actionable validation of a BENCH_collectives.json payload: an
+    empty or field-missing input must fail loudly, not fit a degenerate
+    model or install an empty table."""
+    if not isinstance(bench, dict):
+        raise ValueError(
+            f"{what} expects the parsed BENCH_collectives.json dict, "
+            f"got {type(bench).__name__}; load it with json.load() or "
+            f"pass the path to Communicator.load_bench_tuning")
+    if "points" not in bench:
+        raise ValueError(
+            f"{what}: bench payload has no 'points' field "
+            f"(keys: {sorted(bench)[:8]}) — not a BENCH_collectives.json "
+            f"payload; regenerate it with `python benchmarks/run.py "
+            f"--json`")
+    if not bench["points"]:
+        raise ValueError(
+            f"{what}: bench payload has an empty 'points' list — "
+            f"nothing to fit/rank; regenerate it with `python "
+            f"benchmarks/run.py --json`")
+
+
+def fit_from_traces(traces, base: LinkModel = ICI, *,
+                    allow_single_size: bool = False) -> LinkModel:
+    """Fit α, β AND ``sync_us`` from captured per-instruction traces
+    (``repro.core.trace``) — replacing the guessed ``sync_us`` constant
+    the α-β model carried (ROADMAP: the bench fit could not observe it).
+
+    Per-event observations map one-to-one onto the model's terms
+    (classic per-message α-β: a put costs ``α + bytes/β``):
+
+    * **α, β** — least squares of put-event service time against bytes
+      moved; the regression intercept is α (per-message fixed latency),
+      the slope is 1/β. Bytes are tried both raw and hop-weighted
+      (wire bytes), keeping whichever explains the services better —
+      which also *fits the torus flag*: if cost scales with hop distance
+      the fabric behaves like a torus, if not it behaves switched. On
+      CPU emulation a memcpy costs the same at any "distance", so traces
+      fit ``torus=False``.
+    * **sync_us** — median wait-event service (the per-sync cost the
+      optimizer's sync-batching pass removes; O0 traces observe many of
+      these, O2 traces few — which is how O0→O2 deltas are predicted).
+
+    With puts at only ONE byte count α and β cannot be separated: the
+    default is to raise (capture a second size). ``allow_single_size=
+    True`` instead pins α at ``base.alpha_us`` and solves β from the
+    median put service — the degraded fit ``whatif`` falls back to when
+    asked to predict from a single captured trace.
+    """
+    import numpy as np
+
+    traces = list(traces)
+    if not traces:
+        raise ValueError(
+            "fit_from_traces needs at least one captured trace; record "
+            "one with Communicator(trace=True) or trace.capture(...)")
+    puts = [(ev.bytes, ev.wire_bytes, ev.service_us)
+            for t in traces for ev in t.events if ev.op == "put"]
+    if not puts:
+        raise ValueError(
+            "fit_from_traces: no put events in the given traces — "
+            "cannot fit β; capture a communication collective")
+    waits = [ev.service_us for t in traces for ev in t.events
+             if ev.op == "wait"]
+    sync = float(np.median(waits)) if waits else base.sync_us
+
+    if len({b for b, _, _ in puts}) < 2:
+        if not allow_single_size:
+            raise ValueError(
+                "fit_from_traces: all put events move the same byte "
+                "count — β is unidentifiable; capture traces at >= 2 "
+                "payload sizes (or pass allow_single_size=True to pin "
+                "α at the base model and fit β alone)")
+        nb = puts[0][1] if base.torus else puts[0][0]
+        svc = float(np.median([s for _, _, s in puts]))
+        slope = max(svc - base.alpha_us, 1e-9) / max(nb, 1)
+        return dataclasses.replace(base, beta_GBps=1e-3 / slope,
+                                   sync_us=sync)
+
+    def _beta_fit(xs):
+        A = np.array([[1.0, x] for x in xs], float)
+        y = np.array([s for _, _, s in puts], float)
+        sol, res, *_ = np.linalg.lstsq(A, y, rcond=None)
+        pred = A @ sol
+        return float(sol[0]), float(sol[1]), float(np.sum((y - pred) ** 2))
+
+    int_raw, slope_raw, res_raw = _beta_fit([b for b, _, _ in puts])
+    int_wire, slope_wire, res_wire = _beta_fit([w for _, w, _ in puts])
+    if res_wire < res_raw:
+        torus, alpha, slope = True, int_wire, slope_wire
+    elif res_raw < res_wire:
+        torus, alpha, slope = False, int_raw, slope_raw
+    else:                      # indistinguishable (e.g. all shift-1 puts)
+        torus = base.torus
+        alpha, slope = (int_wire, slope_wire) if torus else (int_raw,
+                                                             slope_raw)
+    if slope <= 0:
+        raise ValueError(
+            f"fit_from_traces: degenerate β fit (slope={slope:.4g} us/B "
+            f"<= 0): put service times do not grow with bytes — the "
+            f"traces do not follow the cost model; not installing")
+    if alpha <= 0:             # noise can push the intercept past zero
+        alpha = base.alpha_us
+    return dataclasses.replace(base, alpha_us=alpha,
+                               beta_GBps=1e-3 / slope, torus=torus,
+                               sync_us=sync)
+
+
 def fit_link_model(bench: dict, base: LinkModel = ICI) -> LinkModel:
     """Fit (α, β) from measured wall times in a ``BENCH_collectives.json``
     payload (ROADMAP open item: replace guessed constants with fitted).
@@ -140,6 +304,7 @@ def fit_link_model(bench: dict, base: LinkModel = ICI) -> LinkModel:
 
     from repro.core import passes
 
+    _check_bench_payload(bench, "fit_link_model")
     n = bench.get("n", 8)
     level = bench.get("opt_default", None)
     rows, y = [], []
@@ -157,7 +322,12 @@ def fit_link_model(bench: dict, base: LinkModel = ICI) -> LinkModel:
                      stats[bytes_key]])
         y.append(p["wall_us"])
     if len(rows) < 2:
-        raise ValueError("bench payload has too few usable points to fit")
+        raise ValueError(
+            f"fit_link_model: only {len(rows)} usable point(s) in the "
+            f"bench payload (needs >= 2 'allreduce'/'allgather' points "
+            f"with backend='xla' and a 'wall_us' field); regenerate "
+            f"with `python benchmarks/run.py --json` or fit from traces "
+            f"via fit_from_traces")
     sol, *_ = np.linalg.lstsq(np.asarray(rows, float),
                               np.asarray(y, float), rcond=None)
     alpha_us = float(sol[0])

@@ -1,0 +1,241 @@
+"""What-if DAG replay over recorded traces — the simulator half of the
+tuning loop.
+
+A :class:`~.trace.Trace` is a dependency DAG with per-event measured
+service times. This module re-times that DAG:
+
+* :func:`replay` — re-schedule the recorded events. With no cost model
+  the measured services replay exactly (validating the scheduler against
+  the recorded span, tolerance :data:`REPLAY_TOLERANCE`); with a
+  :class:`~.selector.LinkModel` the communication events are re-timed
+  under α/β/sync while compute keeps its measured (or rate-fitted)
+  durations — "what if the link were different?".
+* :func:`whatif` — rebuild the collective at a different **algorithm**
+  or **opt_level**, synthesize its event DAG at the trace's geometry
+  (untimed host emulation, :func:`~.trace.synthesize_events`), and
+  predict its span under the model — "what if I recompiled?". Model
+  constants default to :func:`~.selector.fit_from_traces` on the source
+  trace itself, so the prediction is grounded in the same machine that
+  produced the measurement.
+
+Cost model applied to an event (the α-β model of ``selector``, at event
+granularity):
+
+* put     — ``α + bytes / β`` (classic per-message α-β; hop-weighted
+  ``wire_bytes`` on a torus link)
+* wait    — ``sync_us`` per wait (the per-sync cost the optimizer's
+  batching pass removes; O0 emits many more put/wait events than O2 for
+  the same bytes, which is how O0→O2 deltas are predicted)
+* barrier — α
+* copy/reduce — measured service, or an affine bytes→µs rate fitted
+  from the source trace's compute events (:class:`ComputeRates`)
+
+Validation contract (asserted by ``benchmarks/profile.py`` and the test
+suite): replaying measured services reproduces the span within
+:data:`REPLAY_TOLERANCE`; predicting with constants *fitted from the
+trace* lands within :data:`VALIDATION_TOLERANCE` of the measured span —
+the documented accuracy of the fitted model on CPU emulation, where
+per-event overhead is noisier than real DMA hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import trace as trace_mod
+
+__all__ = ["SimResult", "ComputeRates", "replay", "whatif",
+           "REPLAY_TOLERANCE", "VALIDATION_TOLERANCE"]
+
+#: Replaying the *measured* services through the scheduler must land
+#: within this relative tolerance of the recorded span (it is the same
+#: deterministic computation; the bound guards scheduler drift).
+REPLAY_TOLERANCE = 0.05
+
+#: A model prediction using constants fitted from the trace suite must
+#: land within this relative tolerance of the measured span on CPU
+#: emulation — the documented accuracy of the affine α-β fit, where
+#: memcpy throughput is size-dependent in ways the model cannot see.
+VALIDATION_TOLERANCE = 0.35
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Outcome of one simulation: the predicted span, the source
+    trace's measured span (when applicable), and a per-op service
+    breakdown of the predicted timeline."""
+
+    predicted_us: float
+    measured_us: Optional[float]
+    events: int
+    service_us_by_op: Dict[str, float]
+    config: dict
+
+    @property
+    def delta_us(self) -> Optional[float]:
+        if self.measured_us is None:
+            return None
+        return self.predicted_us - self.measured_us
+
+    @property
+    def rel_err(self) -> Optional[float]:
+        if self.measured_us in (None, 0):
+            return None
+        return abs(self.predicted_us - self.measured_us) / self.measured_us
+
+
+class ComputeRates:
+    """Affine bytes→µs service model for local compute (copy/reduce),
+    fitted from a trace's measured compute events. With no compute
+    events the rate is zero (pure-communication programs)."""
+
+    def __init__(self, intercept_us: float = 0.0,
+                 us_per_byte: float = 0.0) -> None:
+        self.intercept_us = intercept_us
+        self.us_per_byte = us_per_byte
+
+    @classmethod
+    def from_trace(cls, trace: "trace_mod.Trace") -> "ComputeRates":
+        pts = [(ev.bytes, ev.service_us) for ev in trace.events
+               if ev.op in ("copy", "reduce")]
+        if not pts:
+            return cls()
+        if len({b for b, _ in pts}) < 2:
+            # one size: a flat per-event cost is the best available fit
+            return cls(intercept_us=float(np.mean([s for _, s in pts])))
+        A = np.array([[1.0, b] for b, _ in pts], float)
+        y = np.array([s for _, s in pts], float)
+        sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+        return cls(intercept_us=max(0.0, float(sol[0])),
+                   us_per_byte=max(0.0, float(sol[1])))
+
+    def __call__(self, ev: "trace_mod.TraceEvent") -> float:
+        return self.intercept_us + self.us_per_byte * ev.bytes
+
+
+def _model_service(link, rates: Optional[ComputeRates],
+                   measured: Optional[Dict[int, float]] = None):
+    """Per-event service under the α-β model (see module docstring).
+    ``measured`` maps id(event) -> recorded service for compute events
+    when no rates are given (replay-under-modified-link)."""
+    def service(ev: "trace_mod.TraceEvent") -> float:
+        if ev.op == "put":
+            nb = ev.wire_bytes if link.torus else ev.bytes
+            return link.alpha_us + nb / (link.beta_GBps * 1e3)
+        if ev.op == "wait":
+            return link.sync_us
+        if ev.op == "barrier":
+            return link.alpha_us
+        if rates is not None:
+            return rates(ev)
+        if measured is not None:
+            return measured[id(ev)]
+        return 0.0
+
+    return service
+
+
+def _copy_events(events) -> List["trace_mod.TraceEvent"]:
+    return [dataclasses.replace(ev, deps=list(ev.deps)) for ev in events]
+
+
+def replay(trace: "trace_mod.Trace", *, link=None,
+           rates: Optional[ComputeRates] = None) -> SimResult:
+    """Re-schedule a recorded trace (see module docstring).
+
+    ``link=None`` replays the measured services exactly. With a
+    :class:`~.selector.LinkModel`, communication events are re-timed
+    under the model and compute events keep measured durations (or
+    ``rates``) — the "same DAG, different link" what-if.
+    """
+    measured = {id(ev): ev.service_us for ev in trace.events}
+    events = _copy_events(trace.events)
+    # _copy_events changes identities; key measured services positionally
+    measured_by_pos = [trace.events[i].service_us
+                       for i in range(len(trace.events))]
+    pos = {id(ev): i for i, ev in enumerate(events)}
+    if link is None:
+        service = lambda ev: measured_by_pos[pos[id(ev)]]  # noqa: E731
+    else:
+        by_id = {id(ev): measured_by_pos[pos[id(ev)]] for ev in events}
+        service = _model_service(link, rates, measured=by_id)
+    span = trace_mod.schedule(events, service)
+    by_op: Dict[str, float] = {}
+    for ev in events:
+        by_op[ev.op] = by_op.get(ev.op, 0.0) + ev.service_us
+    del measured
+    return SimResult(
+        predicted_us=span, measured_us=trace.span_us, events=len(events),
+        service_us_by_op={k: round(v, 3) for k, v in sorted(by_op.items())},
+        config=dict(mode="replay", algo=trace.algo,
+                    opt_level=trace.opt_level,
+                    link=None if link is None else dataclasses.asdict(link)))
+
+
+def _rebuild_executor(trace: "trace_mod.Trace", algo: str, level: int,
+                      backend: str):
+    from repro.core import algorithms as algos
+    from repro.core import passes
+    from repro.core.executor import PallasExecutor, XlaExecutor
+
+    builder = algos.REGISTRY.get(algo)
+    if builder is None:
+        raise ValueError(
+            f"whatif cannot rebuild algorithm {algo!r}: not in "
+            f"algorithms.REGISTRY (candidates: "
+            f"{sorted(algos.REGISTRY)})")
+    prog = passes.optimize(builder(trace.n), level, trace.n)
+    n_in = prog.chunks[prog.in_buffer]
+    chunk_rows = max(1, -(-trace.rows_in // n_in))   # pad up if needed
+    if backend == "pallas":
+        ex = PallasExecutor(prog, "x")
+    else:
+        ex = XlaExecutor(prog, "x", vectorize=level > 0)
+    return ex, chunk_rows
+
+
+def whatif(trace: "trace_mod.Trace", *, algo: Optional[str] = None,
+           opt_level: Optional[int] = None, link=None,
+           backend: Optional[str] = None) -> SimResult:
+    """Predict the span of the trace's collective rebuilt with a
+    different algorithm / opt_level / backend / link — BEFORE
+    recompiling anything (see module docstring).
+
+    The rebuilt program's event DAG is synthesized at the trace's
+    geometry; communication is timed by ``link`` (default: constants
+    fitted from this trace via ``sel.fit_from_traces``), compute by
+    rates fitted from the trace's measured compute events.
+    """
+    from repro.core import selector as sel
+
+    algo = algo if algo is not None else trace.algo
+    if algo is None:
+        raise ValueError(
+            "whatif needs an algorithm: the trace records none and no "
+            "algo= was given")
+    level = trace.opt_level if opt_level is None else opt_level
+    level = 2 if level is None else level
+    backend = backend or trace.backend
+    executor, chunk_rows = _rebuild_executor(trace, algo, level, backend)
+    if link is None:
+        # a single captured trace usually has puts at one byte count;
+        # pin α at the base model rather than refusing to predict
+        link = sel.fit_from_traces([trace], allow_single_size=True)
+    events, _ = trace_mod.synthesize_events(
+        executor, trace.n, chunk_rows, trace.cols, trace.dtype)
+    rates = ComputeRates.from_trace(trace)
+    span = trace_mod.schedule(events, _model_service(link, rates))
+    by_op: Dict[str, float] = {}
+    for ev in events:
+        by_op[ev.op] = by_op.get(ev.op, 0.0) + ev.service_us
+    same_shape = (algo == trace.algo and level == trace.opt_level
+                  and backend == trace.backend)
+    return SimResult(
+        predicted_us=span,
+        measured_us=trace.span_us if same_shape else None,
+        events=len(events),
+        service_us_by_op={k: round(v, 3) for k, v in sorted(by_op.items())},
+        config=dict(mode="whatif", algo=algo, opt_level=level,
+                    backend=backend, link=dataclasses.asdict(link)))

@@ -78,6 +78,8 @@ class ServeConfig:
     retry_backoff_s: float = 0.05  # base of the exponential backoff
     plan_timeout_s: Optional[float] = None   # per-step watchdog (None = off)
     guard_numerics: bool = False   # reject non-finite logits, redo on auto
+    # -- profiling (docs/profiling.md) -------------------------------------
+    trace: bool = False            # capture per-instruction plan traces
 
 
 class Engine:
@@ -111,7 +113,7 @@ class Engine:
         tp = int(mesh.shape.get(ax.model, 1))
         self.comm = comm if comm is not None else comm_lib.Communicator(
             ax.model, n=tp, backend=comm_lib.default_backend(),
-            verify=serve_cfg.verify)
+            verify=serve_cfg.verify, trace=serve_cfg.trace)
         b_local, _ = local_batch(mesh, ax, serve_cfg.batch)
         self.decode_plans: dict = {}
         plan_err: Optional[Exception] = None
@@ -247,7 +249,10 @@ class Engine:
         ``compile_decode_plans``). ``health`` merges the runtime
         guardrail counters with the communicator's compile-side ones
         (verified programs, verification failures, recompile-once
-        degradations, backend+mode fallbacks)."""
+        degradations, backend+mode fallbacks). With
+        ``ServeConfig.trace=True`` the ``trace`` key carries each
+        plan's latest captured timeline summary (None until that plan
+        has executed; see docs/profiling.md)."""
         def top_plan(p):
             return p.plans[p.buckets[-1]] if isinstance(
                 p, comm_lib.BucketedPlan) else p
@@ -283,9 +288,13 @@ class Engine:
         health["verify_failures"] = self.comm.health["verify_failures"]
         health["recompiles"] = self.comm.health["recompiles"]
         health["fallbacks"] += self.comm.health["fallbacks"]
+        traces = {
+            name: (tr.summary() if (tr := top_plan(p).last_trace)
+                   is not None else None)
+            for name, p in self.decode_plans.items()}
         return dict(mode=self.mode, plans=cards,
                     predicted_comm_us_per_token=round(per_tok, 2),
-                    health=health,
+                    health=health, trace=traces,
                     communicator=repr(self.comm))
 
     # -- prefill: feed prompts token-by-token through the decode path ------

@@ -1,0 +1,231 @@
+"""Simulator + fitting: replay exactness, fitted-model validation,
+what-if O0→O2 sign, planted-constant recovery, trace-driven tuning
+table, and the bench-payload error contracts (docs/profiling.md,
+docs/tuning.md)."""
+import dataclasses
+import statistics
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selector as sel
+from repro.core import simulate, trace
+from repro.core.comm import Communicator
+
+N = 8
+
+
+def _capture(collective, rows, cols, algo, opt_level):
+    plan = Communicator("x", n=N).compile(
+        collective, (rows, cols), jnp.float32, algo=algo,
+        opt_level=opt_level)
+    return trace.capture_plan(plan)
+
+
+def _suite():
+    configs = [("all_reduce", "allreduce_ring", 2),
+               ("all_reduce", "allreduce_2pa", 2),
+               ("reduce_scatter", "allpairs_rs", 0),
+               ("all_gather", "ring_ag", 2)]
+    return [_capture(coll, rows, cols, algo, lvl)
+            for coll, algo, lvl in configs
+            for rows, cols in ((64, 8), (1024, 128))]
+
+
+# ---------------------------------------------------------------------------
+# replay: measured services reproduce the recorded span
+# ---------------------------------------------------------------------------
+def test_replay_reproduces_measured_span():
+    for t in _suite():
+        r = simulate.replay(t)
+        assert r.rel_err <= simulate.REPLAY_TOLERANCE, \
+            f"{t.algo} O{t.opt_level}: replay drift {r.rel_err:.3f}"
+        assert r.events == len(t.events)
+        assert r.measured_us == t.span_us
+
+
+# ---------------------------------------------------------------------------
+# validation: fitted constants predict the measured span per config
+# ---------------------------------------------------------------------------
+def test_fitted_model_validates_three_plus_configs():
+    traces = _suite()
+    link = sel.fit_from_traces(traces)
+    per_config: dict = {}
+    for t in traces:
+        mod = simulate.replay(t, link=link)
+        cfg = (t.collective, t.algo, t.opt_level)
+        per_config.setdefault(cfg, []).append(mod.rel_err)
+    validated = [cfg for cfg, errs in per_config.items()
+                 if sorted(errs)[len(errs) // 2]
+                 <= simulate.VALIDATION_TOLERANCE]
+    assert len(validated) >= 3, \
+        f"only {validated} of {sorted(per_config)} within tolerance"
+
+
+def test_whatif_predicts_sign_of_o0_o2_delta():
+    # at tiny payloads per-event overhead dominates: O0 (per-chunk puts
+    # and waits) is measurably slower than O2 (batched), and the
+    # simulator must predict that sign. A single emulated span is noisy
+    # at this scale, so the measured side is a median of 5 captures
+    # (same discipline as benchmarks/profile.py::_whatif_sign).
+    med0 = statistics.median(
+        _capture("reduce_scatter", 64, 8, "allpairs_rs", 0).span_us
+        for _ in range(5))
+    med2 = statistics.median(
+        _capture("reduce_scatter", 64, 8, "allpairs_rs", 2).span_us
+        for _ in range(5))
+    t2 = _capture("reduce_scatter", 64, 8, "allpairs_rs", 2)
+    link = sel.fit_from_traces(_suite())
+    w0 = simulate.whatif(t2, opt_level=0, link=link)
+    w2 = simulate.whatif(t2, opt_level=2, link=link)
+    assert w0.events > w2.events
+    assert med0 > med2
+    assert w0.predicted_us > w2.predicted_us
+
+
+def test_whatif_same_config_carries_measured_baseline():
+    t = _capture("all_reduce", 64, 8, "allreduce_ring", 2)
+    same = simulate.whatif(t, link=sel.ICI)
+    assert same.measured_us == t.span_us       # same algo/level/backend
+    other = simulate.whatif(t, algo="allreduce_2pa", link=sel.ICI)
+    assert other.measured_us is None           # not comparable
+    with pytest.raises(ValueError, match="not in\\s+algorithms.REGISTRY"):
+        simulate.whatif(t, algo="nope")
+
+
+# ---------------------------------------------------------------------------
+# fit_from_traces: planted-constant recovery (property test)
+# ---------------------------------------------------------------------------
+def _synthetic_trace(alpha, beta_GBps, sync, torus, sizes, n=8):
+    """Hand-built traces whose put/wait services follow the α-β model
+    exactly; mixed shifts make raw and wire bytes disagree so the
+    torus flag is identifiable."""
+    events = []
+    for iid, nbytes in enumerate(sizes):
+        for shift, rank in ((1, 0), (3, 1)):   # 1-hop and min(3, n-3)-hop
+            wire = nbytes * min(shift, n - shift)
+            svc = alpha + (wire if torus else nbytes) / (beta_GBps * 1e3)
+            events.append(trace.TraceEvent(
+                iid=iid, sub=0, op="put", lowered="ppermute", rank=rank,
+                peer=(rank + shift) % n, round_id=iid, chunks=1,
+                bytes=nbytes, wire_bytes=wire, issue_us=0.0,
+                complete_us=svc))
+            events.append(trace.TraceEvent(
+                iid=iid, sub=1, op="wait", lowered="data_dep", rank=rank,
+                peer=-1, round_id=iid, chunks=1, bytes=nbytes,
+                wire_bytes=0, issue_us=0.0, complete_us=sync,
+                deps=[(iid, 0, rank)]))
+    return trace.Trace(
+        name="synthetic", backend="xla", n=n, shape=(8, 8), rows_in=8,
+        cols=8, dtype="float32", chunk_rows=2, chunk_bytes=64,
+        events=events, span_us=1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=0.5, max_value=8.0),
+       st.floats(min_value=1.0, max_value=200.0),
+       st.floats(min_value=0.05, max_value=2.0),
+       st.sampled_from([False, True]))
+def test_fit_recovers_planted_constants(alpha, beta, sync, torus):
+    t = _synthetic_trace(alpha, beta, sync, torus,
+                         sizes=(1 << 10, 1 << 14, 1 << 18))
+    fitted = sel.fit_from_traces([t])
+    assert fitted.alpha_us == pytest.approx(alpha, rel=1e-4)
+    assert fitted.beta_GBps == pytest.approx(beta, rel=1e-4)
+    assert fitted.sync_us == pytest.approx(sync, rel=1e-6)
+    assert fitted.torus == torus
+
+
+def test_whatif_default_link_works_on_single_trace():
+    # the common interactive flow: capture ONE plan, ask what-if —
+    # whatif must not refuse just because one trace has one put size
+    t = _capture("all_reduce", 64, 8, "allreduce_ring", 2)
+    w = simulate.whatif(t, algo="allreduce_2pa")
+    assert w.predicted_us > 0
+    assert w.config["link"]["beta_GBps"] > 0
+
+
+def test_fit_single_size_pins_alpha_and_fits_beta():
+    t = _synthetic_trace(1.0, 50.0, 0.2, False, sizes=(1 << 14,))
+    base = sel.LinkModel(alpha_us=1.0, beta_GBps=5.0, torus=False,
+                         sync_us=9.9)
+    fitted = sel.fit_from_traces([t], base, allow_single_size=True)
+    assert fitted.alpha_us == base.alpha_us            # pinned
+    assert fitted.beta_GBps == pytest.approx(50.0, rel=1e-6)
+    assert fitted.sync_us == pytest.approx(0.2)        # still from waits
+
+
+def test_fit_from_traces_error_contracts():
+    with pytest.raises(ValueError, match="at least one captured trace"):
+        sel.fit_from_traces([])
+    one_size = _synthetic_trace(1.0, 50.0, 0.2, False, sizes=(1024,))
+    with pytest.raises(ValueError, match="unidentifiable"):
+        sel.fit_from_traces([one_size])
+    no_puts = dataclasses.replace(
+        one_size, events=[e for e in one_size.events if e.op != "put"])
+    with pytest.raises(ValueError, match="no put events"):
+        sel.fit_from_traces([no_puts])
+
+
+# ---------------------------------------------------------------------------
+# TuningTable.from_traces: the demonstrated selector change
+# ---------------------------------------------------------------------------
+def test_from_traces_changes_selector_choice():
+    """Under a switched (non-torus) link fitted/planted from emulation,
+    hop distance is free — the simulator ranks the 2-round allpairs
+    2PA above the 14-round ring at large sizes, flipping the default."""
+    traces = [_capture("all_reduce", rows, cols, None, None)
+              for rows, cols in ((64, 8), (4096, 128))]
+    link = sel.LinkModel(alpha_us=1.0, beta_GBps=50.0, torus=False,
+                         sync_us=0.2)
+    table = sel.TuningTable.from_traces(traces, link=link)
+    nbytes = 4096 * 128 * 4
+    default = sel.choose("all_reduce", n=N, nbytes=nbytes)
+    tabled = table.lookup("all_reduce", nbytes)
+    assert default == "allreduce_ring"
+    assert tabled == "allreduce_2pa"
+    assert tabled != default
+    # install it: the communicator now picks the simulated-fastest
+    tuned = Communicator("x", n=N, table=table, link=link)
+    assert tuned.compile("all_reduce", (4096, 128),
+                         jnp.float32).algo == "allreduce_2pa"
+
+
+def test_from_traces_empty_raises():
+    with pytest.raises(ValueError, match="at least one captured trace"):
+        sel.TuningTable.from_traces([])
+
+
+# ---------------------------------------------------------------------------
+# bench payload error contracts (from_bench / fit_link_model fallback)
+# ---------------------------------------------------------------------------
+def test_bench_payload_errors_are_actionable():
+    for fn in (sel.fit_link_model, sel.TuningTable.from_bench):
+        with pytest.raises(ValueError, match="has no 'points' field"):
+            fn({"n": 8})
+        with pytest.raises(ValueError, match="empty 'points' list"):
+            fn({"n": 8, "points": []})
+        with pytest.raises(ValueError,
+                           match="expects the parsed BENCH_collectives"):
+            fn([1, 2, 3])
+
+
+def test_fit_link_model_unusable_points_error_names_filters():
+    bench = {"n": 8, "points": [{"bench": "weird", "backend": "cpu"}]}
+    with pytest.raises(ValueError, match="run.py --json"):
+        sel.fit_link_model(bench)
+
+
+# ---------------------------------------------------------------------------
+# link-model what-if: monotone in the link constants
+# ---------------------------------------------------------------------------
+def test_replay_under_slower_link_is_slower():
+    t = _capture("all_reduce", 1024, 128, "allreduce_ring", 2)
+    link = sel.fit_from_traces([_capture("all_reduce", r, c,
+                                         "allreduce_ring", 2)
+                                for r, c in ((64, 8), (1024, 128))])
+    fast = simulate.replay(t, link=link)
+    slow = simulate.replay(
+        t, link=dataclasses.replace(link, beta_GBps=link.beta_GBps / 10))
+    assert slow.predicted_us > fast.predicted_us
