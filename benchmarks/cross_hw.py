@@ -2,8 +2,26 @@
 algorithms priced on two TPU generations' link models, plus the
 selection crossovers per hardware. The paper's argument — the algorithm
 library + selector retarget with only new hardware constants — is
-demonstrated by the table itself (no algorithm code changes)."""
+demonstrated by the table itself (no algorithm code changes).
+
+Two further sections ride on the same cost model:
+
+* ``sweep_points`` — the widened registry at n∈{16, 32, 64}: per-size
+  selector picks with every candidate's α-β estimate attached. At n=8
+  the ring/1PA/2PA family barely separates; at these sizes the
+  log-step algorithms (swing, recursive doubling) win the
+  latency-bound middle of the range and rings keep the
+  bandwidth-bound top — the separation this registry exists for.
+* ``hierarchical_points`` — flat-vs-hierarchical AllReduce on the
+  modeled 2D ICI×DCN mesh (4×4): the flat single-axis plan pays DCN
+  for every byte, the ``HierarchicalCommunicator``'s
+  RS(ICI) → AR(DCN) → AG(ICI) composition crosses DCN with 1/L of the
+  payload. Points carry (n, axes, algo) metadata and land in
+  ``BENCH_collectives.json`` via ``run.py --json``.
+"""
 from __future__ import annotations
+
+import jax.numpy as jnp
 
 from repro.core import selector as sel
 
@@ -16,6 +34,57 @@ HW_LINKS = {
 
 SIZES = [1 << 10, 1 << 13, 1 << 17, 1 << 21, 1 << 26, 1 << 30]
 
+#: the tentpole geometries: host-device-count emulation covers n=16
+#: end-to-end (tests / hier_smoke); 32 and 64 are costed analytically
+SWEEP_NS = [16, 32, 64]
+
+#: the modeled 2D mesh (local × node = 4 × 4 = 16 ranks)
+MESH_LOCAL, MESH_NODE = 4, 4
+
+
+def sweep_points(points: list) -> list:
+    """Registry sweep: selector choice per (n, size) for all_reduce on
+    v5e ICI, with every supported candidate's estimate attached so the
+    crossover structure is inspectable from the JSON artifact alone."""
+    for n in SWEEP_NS:
+        for nbytes in SIZES:
+            ests = {c: round(sel.estimate_us(c, n, nbytes), 2)
+                    for c in sel.CANDIDATES["all_reduce"]
+                    if sel.supports(c, n)}
+            pick = sel.choose("all_reduce", n=n, nbytes=nbytes)
+            points.append(dict(
+                bench="registry_sweep", collective="all_reduce", n=n,
+                nbytes=nbytes, algo=pick, predicted_us=ests[pick],
+                ring_us=ests["allreduce_ring"], estimates=ests))
+    return points
+
+
+def hierarchical_points(points: list) -> list:
+    """Flat single-axis vs hierarchical AllReduce on the 2D ICI×DCN
+    model. Both sides are compiled plans (real programs through the
+    pass pipeline and verifier), priced analytically: the flat plan on
+    the DCN link its 16 ranks would actually span, the hierarchical
+    plan on per-axis links (ICI intra, DCN inter)."""
+    from repro.core.comm import Communicator, HierarchicalCommunicator
+
+    L, M = MESH_LOCAL, MESH_NODE
+    flat_comm = Communicator("fx", n=L * M, link=sel.DCN)
+    hc = HierarchicalCommunicator("local", "node", local_n=L, node_n=M)
+    cols = 128
+    for nbytes in SIZES:
+        rows = max(nbytes // 4 // cols, L)
+        real_bytes = rows * cols * 4
+        flat = flat_comm.compile("all_reduce", (rows, cols), jnp.float32)
+        hier = hc.compile((rows, cols), jnp.float32)
+        points.append(dict(
+            bench="hier_vs_flat", collective="all_reduce", n=L * M,
+            axes=dict(local=L, node=M), nbytes=real_bytes,
+            algo=hier.algo, flat_algo=flat.algo,
+            predicted_us=round(hier.estimate_us, 2),
+            flat_predicted_us=round(flat.estimate_us, 2),
+            speedup_vs_flat=round(flat.estimate_us / hier.estimate_us, 3)))
+    return points
+
 
 def main(rows=None):
     rows = rows if rows is not None else []
@@ -26,4 +95,12 @@ def main(rows=None):
             ring = sel.estimate_us("allreduce_ring", 8, nbytes, link)
             rows.append((f"crosshw_{hw}", nbytes, algo, round(est, 1),
                          round(ring, 1), f"{ring / est:.2f}x_vs_ring"))
+    for p in sweep_points([]):
+        rows.append((f"sweep_n{p['n']}", p["nbytes"], p["algo"],
+                     p["predicted_us"], p["ring_us"],
+                     f"{p['ring_us'] / p['predicted_us']:.2f}x_vs_ring"))
+    for p in hierarchical_points([]):
+        rows.append(("hier_vs_flat", p["nbytes"], p["algo"],
+                     p["predicted_us"], p["flat_predicted_us"],
+                     f"{p['speedup_vs_flat']}x_vs_flat"))
     return rows

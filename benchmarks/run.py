@@ -174,6 +174,11 @@ def main(argv=None) -> None:
         # the trace-generated tuning table vs the selector defaults
         from benchmarks import profile
         payload["profile"] = profile.profile_points(payload["points"])
+        # widened registry at n=16/32/64 + flat-vs-hierarchical on the
+        # modeled 2D ICI x DCN mesh
+        from benchmarks import cross_hw
+        cross_hw.sweep_points(payload["points"])
+        cross_hw.hierarchical_points(payload["points"])
         meta = _stamp_payload(payload)
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
@@ -202,6 +207,17 @@ def main(argv=None) -> None:
               f"{prof['table_changes']} tuning-table changes vs defaults; "
               f"stamped {meta['git_sha']} {meta['created']}, "
               f"history at {hist}")
+        sweep = [p for p in payload["points"]
+                 if p["bench"] == "registry_sweep"]
+        log_wins = sorted({p["algo"] for p in sweep
+                           if p["algo"] in ("swing_allreduce",
+                                            "allreduce_rd")})
+        hier = [p for p in payload["points"] if p["bench"] == "hier_vs_flat"]
+        best = max(p["speedup_vs_flat"] for p in hier)
+        print(f"registry sweep: {len(sweep)} points at "
+              f"n={sorted({p['n'] for p in sweep})}, log-step winners "
+              f"{log_wins}; hier-vs-flat up to {best}x on the 4x4 "
+              f"ICIxDCN model")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

@@ -32,7 +32,7 @@ run_docs() {
   echo "== doc smoke: docs pages present =="
   for f in README.md docs/architecture.md docs/plan-lifecycle.md \
            docs/dsl.md docs/serving.md docs/tuning.md \
-           docs/robustness.md docs/profiling.md; do
+           docs/robustness.md docs/profiling.md docs/hierarchical.md; do
     [[ -s "$f" ]] || { echo "MISSING: $f" >&2; exit 1; }
   done
   echo "== doc smoke: executing examples/*.py =="
@@ -61,6 +61,9 @@ run_docs() {
 if [[ "${1:-}" == "--smoke" ]]; then
   shift
   python benchmarks/run.py --smoke "$@"
+  # n=16 multi-axis smoke: hierarchical plan compile + JSON round-trip
+  # + replay on an emulated 4x4 mesh (own process: it owns XLA_FLAGS)
+  python benchmarks/hier_smoke.py
   exit 0
 fi
 if [[ "${1:-}" == "--docs" ]]; then

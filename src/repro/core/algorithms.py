@@ -19,13 +19,30 @@ from __future__ import annotations
 
 import functools
 
-from repro.core.dsl import CONST, PEER, RANK, Program
+from repro.core.dsl import CONST, PARITY_PEER, PEER, RANK, Program
 
 __all__ = [
     "allpairs_rs", "allpairs_ag", "allreduce_1pa", "allreduce_2pa",
     "ring_ag", "ring_rs", "allreduce_ring", "alltoall",
-    "broadcast_allpairs", "REGISTRY",
+    "broadcast_allpairs", "halving_rs", "doubling_ag", "allreduce_rd",
+    "swing_allreduce", "is_power_of_two", "REGISTRY",
 ]
+
+
+def is_power_of_two(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def _require_power_of_two(name: str, n: int) -> int:
+    """log2(n), or an actionable error: the recursive-distance family
+    only closes over power-of-two rings (selector falls back to ring
+    elsewhere — see ``selector.supports``)."""
+    if not is_power_of_two(n) or n < 2:
+        raise ValueError(
+            f"{name} requires a power-of-two axis size >= 2, got n={n}; "
+            f"use a ring/all-pairs algorithm for this size (the selector "
+            f"does this automatically)")
+    return n.bit_length() - 1
 
 
 @functools.lru_cache(maxsize=None)
@@ -191,6 +208,172 @@ def broadcast_allpairs(n: int, root: int = 0) -> Program:
     return p.freeze()
 
 
+@functools.lru_cache(maxsize=None)
+def halving_rs(n: int) -> Program:
+    """Recursive-halving ReduceScatter (power-of-two n): log2(n) rounds,
+    ring-equal n-1 chunks on the wire. At step distance d each rank
+    sends its partial window [r+d, r+2d) to r+d and folds the window
+    [r, r+d) received from r-d, halving the live window per step until
+    only the fully-reduced chunk r remains.
+
+    Running partials live in ``acc`` (local-only, indexed by absolute
+    chunk); every step receives into its own disjoint ``scratch`` slot
+    range (offset n-2d), so no slot is ever reused across rounds — the
+    hazard discipline the static verifier enforces."""
+    k = _require_power_of_two("halving_rs", n)
+    p = Program("halving_rs",
+                chunks=dict(input=n, scratch=n - 1, acc=n, output=1))
+    for s in range(k):
+        d = n >> (s + 1)
+        o = n - 2 * d                      # this step's scratch offset
+        src_buf = "input" if s == 0 else "acc"
+        with p.round():
+            for j in range(d):
+                p.put(src=(src_buf, PEER(d + j)),
+                      dst=("scratch", CONST(o + j)), to=PEER(+d))
+        with p.round():
+            for j in range(d):
+                p.wait(("scratch", CONST(o + j)), frm=PEER(-d))
+        for j in range(d):
+            p.local_reduce(("acc", PEER(j)),
+                           [(src_buf, PEER(j)), ("scratch", CONST(o + j))])
+    p.local_copy(("output", 0), ("acc", RANK))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def doubling_ag(n: int) -> Program:
+    """Recursive-doubling AllGather (power-of-two n): log2(n) rounds,
+    ring-equal n-1 chunks on the wire. At step distance d each rank
+    forwards its already-gathered window [r, r+d) to r-d, doubling the
+    window per step. Every output slot is written exactly once."""
+    k = _require_power_of_two("doubling_ag", n)
+    p = Program("doubling_ag", chunks=dict(input=1, output=n))
+    p.local_copy(("output", RANK), ("input", 0))
+    for s in range(k):
+        d = 1 << s
+        with p.round():
+            for j in range(d):
+                p.put(src=("output", PEER(j)), dst=("output", PEER(j)),
+                      to=PEER(-d))
+        with p.round():
+            for j in range(d):
+                p.wait(("output", PEER(d + j)), frm=PEER(+d))
+    return p.freeze()
+
+
+@functools.lru_cache(maxsize=None)
+def allreduce_rd(n: int) -> Program:
+    """Recursive halving/doubling AllReduce (power-of-two n) =
+    recursive-halving RS + recursive-doubling AG: 2·log2(n) rounds at
+    ring-equal 2(n-1)/n bandwidth — the classic latency/bandwidth
+    compromise between all-pairs (1-2 rounds, n× bytes) and ring
+    (2(n-1) rounds, optimal bytes)."""
+    k = _require_power_of_two("allreduce_rd", n)
+    p = Program("allreduce_rd",
+                chunks=dict(input=n, scratch=n - 1, acc=n, output=n))
+    # RS phase (recursive halving into acc, as halving_rs)
+    for s in range(k):
+        d = n >> (s + 1)
+        o = n - 2 * d
+        src_buf = "input" if s == 0 else "acc"
+        with p.round():
+            for j in range(d):
+                p.put(src=(src_buf, PEER(d + j)),
+                      dst=("scratch", CONST(o + j)), to=PEER(+d))
+        with p.round():
+            for j in range(d):
+                p.wait(("scratch", CONST(o + j)), frm=PEER(-d))
+        for j in range(d):
+            p.local_reduce(("acc", PEER(j)),
+                           [(src_buf, PEER(j)), ("scratch", CONST(o + j))])
+    p.local_copy(("output", RANK), ("acc", RANK))
+    # AG phase (recursive doubling over the reduced shards)
+    for s in range(k):
+        d = 1 << s
+        with p.round():
+            for j in range(d):
+                p.put(src=("output", PEER(j)), dst=("output", PEER(j)),
+                      to=PEER(-d))
+        with p.round():
+            for j in range(d):
+                p.wait(("output", PEER(d + j)), frm=PEER(+d))
+    return p.freeze()
+
+
+def _swing_rho(s: int) -> int:
+    """Swing step-s pairing distance ρ_s = (1 - (-2)^(s+1)) / 3:
+    +1, -1, +3, -5, +11, ... — always odd, so every step is a pairwise
+    exchange between opposite parities (its own inverse)."""
+    return (1 - (-2) ** (s + 1)) // 3
+
+
+def _swing_chunk_sets(k: int) -> list:
+    """C[s] = the chunk-offset set a rank still owns before RS step s,
+    in the parity frame (chunk = r + (-1)^r·c). C[k] = {0} (only the
+    home chunk survives); growing backwards, step s keeps C[s+1] and
+    sends its image ρ_s - C[s+1] to the step-s peer."""
+    C = [None] * (k + 1)
+    C[k] = {0}
+    for s in range(k - 1, -1, -1):
+        C[s] = C[s + 1] | {_swing_rho(s) - c for c in C[s + 1]}
+    return C
+
+
+@functools.lru_cache(maxsize=None)
+def swing_allreduce(n: int) -> Program:
+    """Swing AllReduce (power-of-two n): log-step RS + AG where the
+    step-s peer is ``r + (-1)^r·ρ_s`` (``PARITY_PEER``), ρ_s = +1, -1,
+    +3, -5, ... Each step is a pairwise exchange between opposite
+    parities; the alternating signs keep hop distances short (|ρ_s|
+    grows ~2^s/3 instead of 2^s), which on a torus roughly halves the
+    hop-weighted wire bytes of recursive halving/doubling at equal
+    round count — the swing algorithm's reason to exist.
+
+    Chunk responsibility is parity-equivariant: before RS step s rank r
+    owns chunks ``{r + (-1)^r·c : c in C[s]}`` (``_swing_chunk_sets``);
+    step s ships the peer's half of that set as partials, received into
+    per-step disjoint scratch slots, and folds into ``acc``. After RS,
+    chunk r is fully reduced at rank r; the AG phase replays the
+    exchanges in reverse directly into ``output``."""
+    k = _require_power_of_two("swing_allreduce", n)
+    C = _swing_chunk_sets(k)
+    p = Program("swing_allreduce",
+                chunks=dict(input=n, scratch=max(n - 1, 1), acc=n, output=n))
+    # RS phase: fold the peer's partials into acc
+    o = 0                                  # per-step scratch offset
+    for s in range(k):
+        rho = _swing_rho(s)
+        cl = sorted(C[s + 1])              # canonical slot order
+        src_buf = "input" if s == 0 else "acc"
+        with p.round():
+            for j, c in enumerate(cl):
+                p.put(src=(src_buf, PARITY_PEER(rho - c)),
+                      dst=("scratch", CONST(o + j)), to=PARITY_PEER(rho))
+        with p.round():
+            for j, c in enumerate(cl):
+                p.wait(("scratch", CONST(o + j)), frm=PARITY_PEER(rho))
+        for j, c in enumerate(cl):
+            p.local_reduce(("acc", PARITY_PEER(c)),
+                           [(src_buf, PARITY_PEER(c)),
+                            ("scratch", CONST(o + j))])
+        o += len(cl)
+    p.local_copy(("output", RANK), ("acc", RANK))
+    # AG phase: reverse the exchanges, writing output slots exactly once
+    for s in range(k - 1, -1, -1):
+        rho = _swing_rho(s)
+        cl = sorted(C[s + 1])
+        with p.round():
+            for c in cl:
+                p.put(src=("output", PARITY_PEER(c)),
+                      dst=("output", PARITY_PEER(c)), to=PARITY_PEER(rho))
+        with p.round():
+            for c in cl:
+                p.wait(("output", PARITY_PEER(rho - c)),
+                       frm=PARITY_PEER(rho))
+    return p.freeze()
+
+
 REGISTRY = {
     "allpairs_rs": allpairs_rs,
     "allpairs_ag": allpairs_ag,
@@ -201,4 +384,8 @@ REGISTRY = {
     "allreduce_ring": allreduce_ring,
     "alltoall": alltoall,
     "broadcast_allpairs": broadcast_allpairs,
+    "halving_rs": halving_rs,
+    "doubling_ag": doubling_ag,
+    "allreduce_rd": allreduce_rd,
+    "swing_allreduce": swing_allreduce,
 }

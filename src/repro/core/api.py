@@ -46,6 +46,7 @@ from repro.core import comm as comm_lib
 from repro.core import selector as sel
 from repro.core import verify as verify_mod
 from repro.core.comm import (BucketedPlan, Communicator, ExecutionPlan,
+                             HierarchicalCommunicator, HierarchicalPlan,
                              default_backend, default_communicator)
 
 __all__ = [
@@ -53,6 +54,7 @@ __all__ = [
     "broadcast", "hierarchical_all_reduce", "tree_all_reduce",
     "default_backend", "compile_plan", "load_plan", "verify_plan",
     "communicator", "Communicator", "ExecutionPlan", "BucketedPlan",
+    "HierarchicalCommunicator", "HierarchicalPlan",
 ]
 
 
@@ -70,12 +72,12 @@ def compile_plan(collective: str, shape, dtype, axis: str,
 
 
 def load_plan(source, *, verify: str = "strict"):
-    """Load an :class:`ExecutionPlan` or :class:`BucketedPlan` from a
-    plan-file path / JSON string, dispatching on the payload's
-    ``kind``. Loaded programs are **verified** before the executor
-    lowering is prepared (``verify='off'|'warn'|'strict'``) — plan
-    files cross a trust boundary and are validated, not trusted
-    (docs/robustness.md)."""
+    """Load an :class:`ExecutionPlan`, :class:`BucketedPlan`, or
+    :class:`HierarchicalPlan` from a plan-file path / JSON string,
+    dispatching on the payload's ``kind``. Loaded programs are
+    **verified** before the executor lowering is prepared
+    (``verify='off'|'warn'|'strict'``) — plan files cross a trust
+    boundary and are validated, not trusted (docs/robustness.md)."""
     import json
     import os
 
@@ -84,8 +86,11 @@ def load_plan(source, *, verify: str = "strict"):
             isinstance(source, str) and not source.lstrip().startswith("{")):
         with open(source) as f:
             text = f.read()
-    if json.loads(text).get("kind") == "bucketed_plan":
+    kind = json.loads(text).get("kind")
+    if kind == "bucketed_plan":
         return BucketedPlan.from_json(text, verify=verify)
+    if kind == "hierarchical_plan":
+        return HierarchicalPlan.from_json(text, verify=verify)
     return ExecutionPlan.from_json(text, verify=verify)
 
 
@@ -98,6 +103,13 @@ def verify_plan(plan, *, num_ranks: Optional[int] = None):
         report = None
         for b in plan.buckets:
             report = verify_plan(plan.plans[b], num_ranks=num_ranks)
+            if report.findings:
+                return report
+        return report
+    if isinstance(plan, HierarchicalPlan):
+        report = None
+        for phase in plan.phases.values():
+            report = verify_plan(phase, num_ranks=num_ranks)
             if report.findings:
                 return report
         return report

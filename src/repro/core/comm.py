@@ -55,9 +55,11 @@ from repro.core.dsl import Program, program_from_dict, program_to_dict
 from repro.core.executor import PallasExecutor, XlaExecutor
 
 __all__ = [
-    "Communicator", "ExecutionPlan", "BucketedPlan", "default_communicator",
-    "default_backend", "reset_default_communicators",
-    "hierarchical_all_reduce", "PLAN_FORMAT_VERSION",
+    "Communicator", "ExecutionPlan", "BucketedPlan",
+    "HierarchicalCommunicator", "HierarchicalPlan",
+    "default_communicator", "default_backend",
+    "reset_default_communicators", "hierarchical_all_reduce",
+    "PLAN_FORMAT_VERSION",
 ]
 
 PLAN_FORMAT_VERSION = 1
@@ -148,6 +150,11 @@ def _resolve_algo(collective: str, n: int, nbytes: int,
             raise ValueError(
                 f"unknown algorithm {algo!r} for {collective!r}; "
                 f"expected one of {cands}")
+        if not sel.supports(algo, n):
+            raise ValueError(
+                f"algorithm {algo!r} does not support n={n} ranks; "
+                f"candidates supported at this geometry: "
+                f"{[a for a in cands if sel.supports(a, n)]}")
         return algo
     return sel.choose(collective, n=n, nbytes=nbytes, link=link,
                       table=table, opt_level=opt_level)
@@ -934,6 +941,252 @@ def hierarchical_all_reduce(x, *, local: Communicator, node: Communicator,
         opt_level=opt_level)
     out = local.all_gather(shard, backend=backend, opt_level=opt_level)
     return out[:rows] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (multi-axis) composition — RS(local) → AR(node) → AG(local)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False, repr=False)
+class HierarchicalPlan:
+    """A frozen 2-axis AllReduce: three per-axis :class:`ExecutionPlan` s
+    composed RS(local) → AR(node) → AG(local) (paper §4.4-2PH; HiCCL's
+    compositional decomposition), or ONE flat plan when the mesh
+    degenerates to a single axis.
+
+    The cross-node phase carries 1/L of the payload (L = local axis
+    size) — the pod-boundary bandwidth saving that motivates the
+    hierarchy. Like :class:`ExecutionPlan`, the artifact is frozen
+    (pure replay, no re-selection), inspectable (:meth:`cost_card`) and
+    serializable (:meth:`to_json` / :meth:`from_json`, nested
+    plan-file payloads under ``kind="hierarchical_plan"``).
+    """
+
+    shape: Tuple[int, int]
+    dtype: str
+    local_axis: str
+    node_axis: Optional[str]
+    #: rows appended before RS-intra and sliced back off after AG-intra
+    #: so the payload divides the local axis
+    pad: int
+    rs_plan: Optional[ExecutionPlan]
+    ar_plan: Optional[ExecutionPlan]
+    ag_plan: Optional[ExecutionPlan]
+    #: set instead of the three phases on the single-axis fallback
+    flat_plan: Optional[ExecutionPlan] = None
+
+    # -- execution ---------------------------------------------------------
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Execute on a local shard inside shard_map over BOTH axes
+        (the flat fallback needs only the local axis). Pure replay."""
+        if tuple(x.shape) != tuple(self.shape):
+            raise ValueError(
+                f"hierarchical plan compiled for shape {self.shape}, "
+                f"got {tuple(x.shape)}")
+        if self.flat_plan is not None:
+            return self.flat_plan(x)
+        rows = x.shape[0]
+        if self.pad:
+            x = jnp.pad(x, ((0, self.pad), (0, 0)))
+        shard = self.rs_plan(x)
+        shard = self.ar_plan(shard)
+        out = self.ag_plan(shard)
+        return out[:rows] if self.pad else out
+
+    # -- inspection --------------------------------------------------------
+    @property
+    def phases(self) -> Dict[str, ExecutionPlan]:
+        if self.flat_plan is not None:
+            return {"flat": self.flat_plan}
+        return {"rs": self.rs_plan, "ar": self.ar_plan, "ag": self.ag_plan}
+
+    @property
+    def estimate_us(self) -> float:
+        """Analytic span: the phases run back-to-back (each phase is a
+        global dependency barrier for the next), so costs add."""
+        return sum(p.estimate_us for p in self.phases.values())
+
+    @property
+    def algo(self) -> str:
+        """Phase algorithms as one label, e.g. ``ring_rs+allreduce_1pa+
+        ring_ag`` (or the flat plan's algorithm)."""
+        return "+".join(p.algo for p in self.phases.values())
+
+    def cost_card(self) -> dict:
+        return dict(collective="all_reduce", kind="hierarchical",
+                    shape=tuple(self.shape), dtype=self.dtype,
+                    axes=[a for a in (self.local_axis, self.node_axis)
+                          if a is not None],
+                    algo=self.algo, pad=self.pad,
+                    estimate_us=round(self.estimate_us, 3),
+                    phases={k: p.cost_card()
+                            for k, p in self.phases.items()})
+
+    def __repr__(self):
+        axes = (self.local_axis if self.node_axis is None
+                else f"{self.local_axis}x{self.node_axis}")
+        return (f"HierarchicalPlan({self.algo} axes={axes} "
+                f"shape={tuple(self.shape)} dtype={self.dtype} "
+                f"est={self.estimate_us:.2f}us)")
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        return dict(
+            version=PLAN_FORMAT_VERSION, format=PLAN_FORMAT_VERSION,
+            kind="hierarchical_plan", collective="all_reduce",
+            shape=list(self.shape), dtype=self.dtype,
+            local_axis=self.local_axis, node_axis=self.node_axis,
+            pad=self.pad, estimate_us=self.estimate_us,
+            plans={k: p.to_dict() for k, p in self.phases.items()},
+        )
+
+    def to_json(self, **json_kw) -> str:
+        json_kw.setdefault("indent", 2)
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_dict(cls, d: dict, *,
+                  verify: str = "strict") -> "HierarchicalPlan":
+        """Rebuild from :meth:`to_dict` output; every nested phase plan
+        is verified and its executor re-prepared (same trust boundary
+        as :meth:`ExecutionPlan.from_dict`)."""
+        _check_version(d, "HierarchicalPlan")
+        if d.get("kind") != "hierarchical_plan":
+            raise ValueError(
+                f"not a hierarchical plan payload (kind="
+                f"{d.get('kind')!r}); use ExecutionPlan/BucketedPlan")
+        req = lambda k: _field(d, k, "HierarchicalPlan")  # noqa: E731
+        plans = {k: ExecutionPlan.from_dict(p, verify=verify)
+                 for k, p in req("plans").items()}
+        if "flat" in plans:
+            phase = dict(rs_plan=None, ar_plan=None, ag_plan=None,
+                         flat_plan=plans["flat"])
+        else:
+            missing = {"rs", "ar", "ag"} - set(plans)
+            if missing:
+                raise ValueError(
+                    f"hierarchical plan payload missing phase plans "
+                    f"{sorted(missing)} (has {sorted(plans)})")
+            phase = dict(rs_plan=plans["rs"], ar_plan=plans["ar"],
+                         ag_plan=plans["ag"], flat_plan=None)
+        return cls(shape=tuple(req("shape")), dtype=req("dtype"),
+                   local_axis=req("local_axis"),
+                   node_axis=req("node_axis"), pad=req("pad"), **phase)
+
+    @classmethod
+    def from_json(cls, s: str, *,
+                  verify: str = "strict") -> "HierarchicalPlan":
+        return cls.from_dict(json.loads(s), verify=verify)
+
+
+class HierarchicalCommunicator:
+    """Two-axis planning object for 2D meshes (ICI intra × DCN inter):
+    owns a local-axis and a node-axis :class:`Communicator` and
+    compiles frozen :class:`HierarchicalPlan` s composing
+    RS(local) → AR(node) → AG(local).
+
+    With ``node_axis=None`` (or a size-1 node axis at compile time) it
+    degrades to a flat single-axis plan on the local communicator — the
+    composition is strictly additive over the single-axis machinery.
+
+    Each axis keeps its own :class:`~.selector.LinkModel` (defaults:
+    ICI intra, DCN inter), so per-phase selection sees the fabric it
+    actually crosses; the cross-node AR uses 1PA for messages at or
+    under ``small_message_bytes`` (paper §4.4's first 2PH variant),
+    else that axis's selector choice.
+    """
+
+    def __init__(self, local_axis: str, node_axis: Optional[str] = None, *,
+                 local_n: Optional[int] = None,
+                 node_n: Optional[int] = None,
+                 local_link: sel.LinkModel = sel.ICI,
+                 node_link: sel.LinkModel = sel.DCN,
+                 backend: Optional[str] = None,
+                 opt_level: Optional[int] = None,
+                 small_message_bytes: int = 1 << 20,
+                 verify: str = "strict"):
+        self.local = Communicator(local_axis, n=local_n, link=local_link,
+                                  backend=backend, opt_level=opt_level,
+                                  verify=verify)
+        self.node = (Communicator(node_axis, n=node_n, link=node_link,
+                                  backend=backend, opt_level=opt_level,
+                                  verify=verify)
+                     if node_axis is not None else None)
+        self.small_message_bytes = small_message_bytes
+        self._plans: Dict[tuple, HierarchicalPlan] = {}
+        self.stats = {"compiles": 0, "hits": 0}
+
+    @property
+    def local_axis(self) -> str:
+        return self.local.axis
+
+    @property
+    def node_axis(self) -> Optional[str]:
+        return None if self.node is None else self.node.axis
+
+    def compile(self, shape, dtype, *, backend: Optional[str] = None,
+                opt_level: Optional[int] = None,
+                local_n: Optional[int] = None,
+                node_n: Optional[int] = None) -> HierarchicalPlan:
+        """Compile (or fetch) the hierarchical AllReduce plan for one
+        2D ``(rows, cols)`` payload. Axis sizes resolve like
+        :meth:`Communicator.compile` (pass ``local_n``/``node_n``
+        outside traced code)."""
+        rows, cols = int(shape[0]), int(shape[1])
+        dtype_name = np.dtype(dtype).name
+        lnum = self.local._axis_size(local_n)
+        nnum = 1 if self.node is None else self.node._axis_size(node_n)
+        key = ((rows, cols), dtype_name, lnum, nnum, backend, opt_level)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats["hits"] += 1
+            return plan
+        if nnum <= 1:
+            flat = self.local.compile(
+                "all_reduce", (rows, cols), dtype, backend=backend,
+                opt_level=opt_level, n=lnum)
+            plan = HierarchicalPlan(
+                shape=(rows, cols), dtype=dtype_name,
+                local_axis=self.local.axis, node_axis=self.node_axis,
+                pad=0, rs_plan=None, ar_plan=None, ag_plan=None,
+                flat_plan=flat)
+        else:
+            pad = (-rows) % lnum
+            padded = rows + pad
+            nbytes = rows * cols * np.dtype(dtype).itemsize
+            rs = self.local.compile(
+                "reduce_scatter", (padded, cols), dtype, backend=backend,
+                opt_level=opt_level, n=lnum)
+            shard_rows = padded // lnum
+            ar = self.node.compile(
+                "all_reduce", (shard_rows, cols), dtype, backend=backend,
+                opt_level=opt_level, n=nnum,
+                algo=("allreduce_1pa" if nbytes <= self.small_message_bytes
+                      else None))
+            ag = self.local.compile(
+                "all_gather", (shard_rows, cols), dtype, backend=backend,
+                opt_level=opt_level, n=lnum)
+            plan = HierarchicalPlan(
+                shape=(rows, cols), dtype=dtype_name,
+                local_axis=self.local.axis, node_axis=self.node.axis,
+                pad=pad, rs_plan=rs, ar_plan=ar, ag_plan=ag)
+        self._plans[key] = plan
+        self.stats["compiles"] += 1
+        return plan
+
+    def all_reduce(self, x, **kw):
+        """x: (rows, cols) local shard inside shard_map over both axes
+        -> same shape, summed over the full 2D mesh."""
+        return self.compile(x.shape, x.dtype, **kw)(x)
+
+    def plans(self) -> Dict[tuple, HierarchicalPlan]:
+        """A snapshot of the hierarchical plan cache."""
+        return dict(self._plans)
+
+    def __repr__(self):
+        return (f"HierarchicalCommunicator(local={self.local.axis!r}, "
+                f"node={self.node_axis!r}, plans={len(self._plans)}, "
+                f"stats={self.stats})")
 
 
 # ---------------------------------------------------------------------------

@@ -50,7 +50,7 @@ import enum
 from typing import Any, List, Optional, Sequence, Tuple
 
 __all__ = [
-    "RANK", "PEER", "CONST", "IndexExpr",
+    "RANK", "PEER", "CONST", "PARITY_PEER", "IndexExpr",
     "Program", "Round", "Instr", "Op", "full_fanout",
     "program_to_dict", "program_from_dict",
 ]
@@ -77,18 +77,24 @@ class IndexExpr:
     relative: bool = True  # False -> plain constant (no mod)
     scale: int = 1         # sub-chunk stride (chunk-split pass)
     post: int = 0          # sub-chunk offset (chunk-split pass)
+    alt: int = 0           # coefficient of (-1)^rank (swing-style
+                           # parity-alternating peers/chunks)
 
     def __call__(self, rank: Any, n: Any):
         """Evaluate for concrete/traced rank. Works on ints and jax values."""
         if not self.relative:
             return self.scale * self.offset + self.post
-        return self.scale * ((self.sign * rank + self.offset) % n) + self.post
+        base = self.sign * rank + self.offset
+        if self.alt:
+            # (-1)^rank as 1 - 2*(rank % 2): int- and traced-value safe
+            base = base + self.alt * (1 - 2 * (rank % 2))
+        return self.scale * (base % n) + self.post
 
     def shift(self) -> int:
         """For put targets: the uniform ring shift this expression encodes
-        (requires sign=+1 and identity scale/post — rank addressing is
-        never sub-chunk-split)."""
-        if not (self.relative and self.sign == 1
+        (requires sign=+1, no parity term, and identity scale/post — rank
+        addressing is never sub-chunk-split)."""
+        if not (self.relative and self.sign == 1 and self.alt == 0
                 and self.scale == 1 and self.post == 0):
             raise ValueError(f"not a uniform shift: {self}")
         return self.offset
@@ -96,7 +102,7 @@ class IndexExpr:
     def is_static(self) -> bool:
         """True when the index is rank-independent: it folds to a Python
         int at trace time (the executors' static-index fast path)."""
-        return not self.relative or self.sign == 0
+        return not self.relative or (self.sign == 0 and self.alt == 0)
 
     def split(self, factor: int, stream: int) -> "IndexExpr":
         """The expression addressing sub-chunk ``stream`` after the
@@ -109,6 +115,8 @@ class IndexExpr:
             base = f"{self.offset}"
         else:
             s = {1: "rank", -1: "-rank", 0: ""}[self.sign]
+            if self.alt:
+                s += f"{self.alt:+d}*(-1)^rank"
             if self.offset:
                 s += f"{self.offset:+d}"
             base = f"({s})%N"
@@ -125,6 +133,15 @@ RANK = IndexExpr(sign=1, offset=0)
 def PEER(offset: int) -> IndexExpr:
     """Rank at ring distance ``offset`` (may be negative)."""
     return IndexExpr(sign=1, offset=offset)
+
+
+def PARITY_PEER(delta: int, offset: int = 0) -> IndexExpr:
+    """Rank (or chunk) at parity-alternating distance
+    ``(-1)^rank * delta + offset`` — the swing-algorithm addressing
+    form: even ranks look ``+delta`` around the ring, odd ranks
+    ``-delta``, so with odd ``delta`` the relation is a pairwise
+    exchange (its own inverse)."""
+    return IndexExpr(sign=1, offset=offset, alt=delta)
 
 
 def CONST(c: int) -> IndexExpr:
@@ -373,9 +390,18 @@ class Program:
         chunk_puts = 0
         for p in puts:
             for _, _, to in p.put_triples():
-                s = to.shift() % n
                 chunk_puts += 1
-                wire += chunk_bytes * min(s, n - s)
+                try:
+                    s = to.shift() % n
+                    hops = min(s, n - s)
+                except ValueError:
+                    # parity-alternating target: hop distance per rank,
+                    # averaged (equal across parities for swing's odd
+                    # deltas, so the average is exact, not a smear)
+                    ds = [(to(r, n) % n - r) % n for r in range(n)]
+                    avg = sum(min(d, n - d) for d in ds) / n
+                    hops = int(avg) if avg.is_integer() else avg
+                wire += chunk_bytes * hops
         return dict(
             puts_per_rank=chunk_puts,
             put_instrs=len(puts),
@@ -401,13 +427,19 @@ class Program:
 # through JSON-compatible dicts. Multi-chunk optimizer forms included.
 # --------------------------------------------------------------------------
 def _expr_to_dict(e: IndexExpr) -> dict:
-    return dict(sign=e.sign, offset=e.offset, relative=e.relative,
-                scale=e.scale, post=e.post)
+    d = dict(sign=e.sign, offset=e.offset, relative=e.relative,
+             scale=e.scale, post=e.post)
+    if e.alt:
+        # emitted only when set, so pre-parity plan files stay
+        # byte-identical and old readers never see the key
+        d["alt"] = e.alt
+    return d
 
 
 def _expr_from_dict(d: dict) -> IndexExpr:
     return IndexExpr(sign=d["sign"], offset=d["offset"],
-                     relative=d["relative"], scale=d["scale"], post=d["post"])
+                     relative=d["relative"], scale=d["scale"],
+                     post=d["post"], alt=d.get("alt", 0))
 
 
 def _chunk_to_dict(c: Tuple[str, IndexExpr]) -> list:

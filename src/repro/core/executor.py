@@ -80,13 +80,45 @@ class _PutAction:
     sb: str = ""
     db: str = ""
     src_expr: Optional[IndexExpr] = None
-    groups: Tuple[Tuple[int, Tuple], ...] = ()   # (shift, triples)
+    groups: Tuple[Tuple[Any, Tuple], ...] = ()   # (peer key, triples)
 
 
-def _group_by_shift(triples, n) -> Tuple[Tuple[int, Tuple], ...]:
-    groups: List[Tuple[int, List]] = []
+def _peer_key(to: IndexExpr, n: int):
+    """Grouping/lowering key for a put's peer map: the uniform ring
+    shift as a plain int when one exists, else the peer ``IndexExpr``
+    itself (rank-dependent maps such as swing's parity-alternating
+    exchanges). Both compare by value, so consecutive puts to the same
+    peer map coalesce either way."""
+    try:
+        return to.shift() % n
+    except ValueError:
+        return to
+
+
+def _peer_perm(key, n: int):
+    """``(perm, inv)`` for a put key: the (sender, receiver) pairs fed
+    to ``ppermute`` plus the static receiver->sender inverse map. The
+    peer map must be a permutation of the ranks — anything else cannot
+    be a point-to-point put round."""
+    if isinstance(key, int):
+        return ([(r, (r + key) % n) for r in range(n)],
+                np.asarray([(r - key) % n for r in range(n)]))
+    dests = [key(r, n) % n for r in range(n)]
+    if sorted(dests) != list(range(n)):
+        raise ValueError(
+            f"put peer map {key!r} is not a permutation of {n} ranks "
+            f"(destinations {dests}); rank-dependent puts must pair "
+            f"every sender with a distinct receiver")
+    inv = np.empty(n, dtype=np.int32)
+    for r, d in enumerate(dests):
+        inv[d] = r
+    return [(r, d) for r, d in enumerate(dests)], inv
+
+
+def _group_by_shift(triples, n) -> Tuple[Tuple[Any, Tuple], ...]:
+    groups: List[Tuple[Any, List]] = []
     for t in triples:
-        s = t[2].shift() % n
+        s = _peer_key(t[2], n)
         if groups and groups[-1][0] == s:
             groups[-1][1].append(t)
         else:
@@ -187,12 +219,13 @@ class XlaExecutor:
     # -- reference (opt_level=0 style) put lowering ------------------------
     def _run_put_reference(self, bufs, instr, me, n):
         for (sb, si), (db, di), to in instr.put_triples():
-            shift = to.shift()
+            key = _peer_key(to, n)
+            perm, inv = _peer_perm(key, n)
             val = jax.lax.dynamic_index_in_dim(
                 bufs[sb], si(me, n), axis=0, keepdims=False)
-            perm = [(r, (r + shift) % n) for r in range(n)]
             val = jax.lax.ppermute(val, self.axis, perm)
-            sender = (me - shift) % n
+            sender = ((me - key) % n if isinstance(key, int)
+                      else jnp.asarray(inv)[me])
             bufs[db] = jax.lax.dynamic_update_index_in_dim(
                 bufs[db], val.astype(bufs[db].dtype), di(sender, n), axis=0)
         return bufs
@@ -223,19 +256,20 @@ class XlaExecutor:
                 g.astype(bufs[action.db].dtype), prev_own, me, axis=0)
             bufs[action.db] = g
             return bufs
-        for shift, triples in action.groups:
-            bufs = self._run_shift_group(bufs, shift, triples, me, n)
+        for key, triples in action.groups:
+            bufs = self._run_shift_group(bufs, key, triples, me, n)
         return bufs
 
-    def _run_shift_group(self, bufs, shift, triples, me, n):
-        """One stacked ppermute for k same-shift chunk puts."""
+    def _run_shift_group(self, bufs, key, triples, me, n):
+        """One stacked ppermute for k same-peer-map chunk puts."""
         axis = self.axis
-        sender = (me - shift) % n
+        perm, inv = _peer_perm(key, n)
+        sender = ((me - key) % n if isinstance(key, int)
+                  else jnp.asarray(inv)[me])
         if len(triples) == 1:
             (sb, si), (db, di), _ = triples[0]
             val = self._get(bufs, sb, si, me, n)
-            val = jax.lax.ppermute(
-                val, axis, [(r, (r + shift) % n) for r in range(n)])
+            val = jax.lax.ppermute(val, axis, perm)
             val = val.astype(bufs[db].dtype)
             if di.is_static():
                 bufs[db] = bufs[db].at[di(0, n)].set(val)
@@ -259,8 +293,7 @@ class XlaExecutor:
         else:
             stacked = jnp.stack(
                 [self._get(bufs, b, e, me, n) for b, e in srcs])
-        stacked = jax.lax.ppermute(
-            stacked, axis, [(r, (r + shift) % n) for r in range(n)])
+        stacked = jax.lax.ppermute(stacked, axis, perm)
         if dst_slab is not None:
             start = k * (dst_slab(0, n) if dst_slab.is_static()
                          else dst_slab(sender, n))
@@ -351,9 +384,11 @@ class XlaExecutor:
                 triples = instr.put_triples()
                 if plan is None:
                     for sub, t in enumerate(triples):
+                        k = _peer_key(t[2], n)
                         out.append(Emission(
                             iid, sub, "put", "ppermute", rid,
-                            shift=t[2].shift() % n, puts=(t,)))
+                            shift=k if isinstance(k, int) else None,
+                            puts=(t,)))
                     continue
                 action = plan[id(instr)]
                 if action.kind == "a2a":
@@ -367,7 +402,8 @@ class XlaExecutor:
                         out.append(Emission(
                             iid, sub, "put",
                             "stacked_ppermute" if len(ts) > 1 else "ppermute",
-                            rid, shift=s % n, puts=tuple(ts)))
+                            rid, shift=s % n if isinstance(s, int) else None,
+                            puts=tuple(ts)))
             elif instr.op is Op.WAIT:
                 out.append(Emission(iid, 0, "wait", "data_dep", rid,
                                     waits=tuple(instr.wait_chunks())))
@@ -487,9 +523,11 @@ class PallasExecutor:
     # -- slab/descriptor planning -------------------------------------------
     def _put_emissions(self, instr, n: int):
         """The DMA descriptors one PUT instruction issues, grouped by
-        shift: ``(shift, triples, slab)`` where ``slab`` is
-        ``(sb, db, src_base, dst_base, k)`` when the group's k chunks
-        move as one contiguous-slab descriptor, else None."""
+        peer map: ``(key, triples, slab)`` where ``key`` is the uniform
+        int shift or the peer ``IndexExpr`` (see ``_peer_key``) and
+        ``slab`` is ``(sb, db, src_base, dst_base, k)`` when the
+        group's k chunks move as one contiguous-slab descriptor, else
+        None."""
         out = []
         for shift, triples in _group_by_shift(instr.put_triples(), n):
             slab = None
@@ -579,15 +617,16 @@ class PallasExecutor:
             if instr.op is Op.PUT:
                 sub = 0
                 for shift, triples, slab in put_plan[id(instr)]:
+                    s = shift % n if isinstance(shift, int) else None
                     if slab is not None:
                         out.append(Emission(iid, sub, "put", "dma_slab",
-                                            rid, shift=shift % n,
+                                            rid, shift=s,
                                             puts=tuple(triples)))
                         sub += 1
                     else:
                         for t in triples:
                             out.append(Emission(iid, sub, "put", "dma",
-                                                rid, shift=shift % n,
+                                                rid, shift=s,
                                                 puts=(t,)))
                             sub += 1
             elif instr.op is Op.WAIT:
@@ -660,7 +699,7 @@ class PallasExecutor:
         return mapping
 
     # -- kernel body --------------------------------------------------------
-    def _kernel(self, x_ref, out_ref, scratch, bar_sem, *sems):
+    def _kernel(self, x_ref, out_ref, locals_refs, bar_sem, *sems):
         p = self.program
         axis = self.axis
         n = compat.axis_size(axis)
@@ -668,8 +707,7 @@ class PallasExecutor:
         prim.start_barrier(axis)
 
         refs = {p.in_buffer: x_ref.at[0], p.out_buffer: out_ref}
-        if scratch is not None:
-            refs["scratch"] = scratch
+        refs.update(locals_refs)
 
         sem_pairs = [(sems[2 * i], sems[2 * i + 1])
                      for i in range(len(sems) // 2)]
@@ -697,7 +735,8 @@ class PallasExecutor:
                 if instr.op is Op.PUT:
                     send_sem, recv_sem = sem_pairs[round_to_pair[ri]]
                     for shift, triples, slab in put_plan[id(instr)]:
-                        peer = (me + shift) % n
+                        peer = ((me + shift) % n if isinstance(shift, int)
+                                else shift(me, n) % n)
                         chan = MemoryChannel(axis, peer, send_sem, recv_sem)
                         if slab is not None:
                             # one strided (contiguous-slab) descriptor
@@ -764,21 +803,21 @@ class PallasExecutor:
             col.record(self, n=compat.axis_size(self.axis), chunk_rows=rows,
                        cols=cols, dtype=np.dtype(x.dtype).name,
                        backend="pallas")
-        scratch_shapes: list[Any] = []
-        has_scratch = "scratch" in p.chunks
-        if has_scratch:
-            scratch_shapes.append(
-                pltpu.VMEM((p.chunks["scratch"], rows, cols), x.dtype))
+        # every buffer that is neither the kernel input nor output gets
+        # its own VMEM scratch allocation (scratch, acc, ... — composed
+        # algorithms may stage through several local buffers)
+        local_names = [b for b in p.chunks
+                       if b not in (p.in_buffer, p.out_buffer)]
+        scratch_shapes: list[Any] = [
+            pltpu.VMEM((p.chunks[b], rows, cols), x.dtype)
+            for b in local_names]
         scratch_shapes.append(pltpu.SemaphoreType.REGULAR)
         scratch_shapes += [pltpu.SemaphoreType.DMA] * (2 * _NUM_SEM_PAIRS)
 
         def kernel(x_ref, out_ref, *rest):
-            if has_scratch:
-                scratch, bar_sem, *sems = rest
-            else:
-                scratch = None
-                bar_sem, *sems = rest
-            self._kernel(x_ref, out_ref, scratch, bar_sem, *sems)
+            locals_refs = dict(zip(local_names, rest[:len(local_names)]))
+            bar_sem, *sems = rest[len(local_names):]
+            self._kernel(x_ref, out_ref, locals_refs, bar_sem, *sems)
 
         out = pl.pallas_call(
             kernel,

@@ -178,14 +178,23 @@ def _is_rank_expr(e: IndexExpr) -> bool:
 
 def _may_alias(dst_pair, to, src_pair, n: int) -> bool:
     """Can the receiver-side chunk a put writes (``dst[di(sender)]`` on
-    rank r, sender = r - shift) be the chunk a later put in the same
-    merged group reads (``src[si(r)]``) on any rank? Merging hoists all
-    reads before all writes, so such a pair must stay unfused."""
+    rank r, sender = the rank whose ``to`` lands on r) be the chunk a
+    later put in the same merged group reads (``src[si(r)]``) on any
+    rank? Merging hoists all reads before all writes, so such a pair
+    must stay unfused."""
     (db, di), (sb, si) = dst_pair, src_pair
     if db != sb:
         return False
-    shift = to.shift()
-    return any(di((r - shift) % n, n) == si(r, n) for r in range(n))
+    try:
+        shift = to.shift()
+        senders = [(r - shift) % n for r in range(n)]
+    except ValueError:
+        # parity-alternating target: invert the peer map per rank
+        inv = {to(s, n) % n: s for s in range(n)}
+        if len(inv) < n:
+            return True            # non-bijective: stay conservative
+        senders = [inv[r] for r in range(n)]
+    return any(di(senders[r], n) == si(r, n) for r in range(n))
 
 
 def _merge_run(run: List[Instr], n: int) -> List[Instr]:

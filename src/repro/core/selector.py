@@ -18,7 +18,8 @@ from typing import Callable, Optional
 from repro.core import algorithms as algos
 
 __all__ = ["LinkModel", "ICI", "DCN", "estimate_us", "choose", "TuningTable",
-           "CANDIDATES", "fit_link_model", "fit_from_traces"]
+           "CANDIDATES", "register_algorithm", "supports",
+           "fit_link_model", "fit_from_traces"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,14 +40,73 @@ ICI = LinkModel(alpha_us=1.0, beta_GBps=50.0, torus=True, sync_us=0.2)
 DCN = LinkModel(alpha_us=10.0, beta_GBps=6.25, torus=False,  # switched
                 sync_us=1.0)
 
-# Candidate algorithms per collective (paper's default library §4.4).
-CANDIDATES = {
-    "all_reduce": ["allreduce_1pa", "allreduce_2pa", "allreduce_ring"],
-    "all_gather": ["allpairs_ag", "ring_ag"],
-    "reduce_scatter": ["allpairs_rs", "ring_rs"],
-    "all_to_all": ["alltoall"],
-}
+# Candidate algorithms per collective (paper's default library §4.4),
+# populated through register_algorithm() below — the same entry point
+# user code extends the selector with.
+CANDIDATES: dict[str, list[str]] = {}
 _CANDIDATES = CANDIDATES  # back-compat alias
+
+# algorithm name -> geometry predicate (None = any n); checked by
+# supports()/choose() so geometry-restricted algorithms (power-of-two
+# recursive doubling/swing) fall out of the candidate set cleanly
+# instead of crashing the cost model
+_SUPPORTS: dict[str, Callable[[int], bool]] = {}
+
+
+def register_algorithm(collective: str, name: str,
+                       builder: Optional[Callable] = None, *,
+                       supports: Optional[Callable[[int], bool]] = None
+                       ) -> None:
+    """Register ``name`` as a selector candidate for ``collective``.
+
+    ``builder`` (``n -> Program``) is added to ``algorithms.REGISTRY``
+    when given; omit it for algorithms already in the registry. A
+    ``supports`` predicate (``n -> bool``) restricts the geometries the
+    candidate is offered at — ``choose()`` skips unsupported candidates
+    (so e.g. a power-of-two-only algorithm silently yields to ring at
+    n=6) and ``estimate_us`` refuses them with an actionable error.
+    Registration is idempotent per (collective, name).
+    """
+    if builder is not None:
+        algos.REGISTRY[name] = builder
+    elif name not in algos.REGISTRY:
+        raise ValueError(
+            f"cannot register {name!r}: not in algorithms.REGISTRY and "
+            f"no builder given — pass builder=<n -> Program>")
+    cands = CANDIDATES.setdefault(collective, [])
+    if name not in cands:
+        cands.append(name)
+    if supports is not None:
+        _SUPPORTS[name] = supports
+
+
+def supports(name: str, n: int) -> bool:
+    """True when algorithm ``name`` can run on an ``n``-rank axis."""
+    pred = _SUPPORTS.get(name)
+    return pred is None or bool(pred(n))
+
+
+for _coll, _name in [
+    ("all_reduce", "allreduce_1pa"),
+    ("all_reduce", "allreduce_2pa"),
+    ("all_reduce", "allreduce_ring"),
+    ("all_gather", "allpairs_ag"),
+    ("all_gather", "ring_ag"),
+    ("reduce_scatter", "allpairs_rs"),
+    ("reduce_scatter", "ring_rs"),
+    ("all_to_all", "alltoall"),
+]:
+    register_algorithm(_coll, _name)
+# log-step entries (this PR): latency-optimal at small/mid sizes, but
+# power-of-two geometries only — ring stays the any-n fallback
+for _coll, _name in [
+    ("all_reduce", "allreduce_rd"),
+    ("all_reduce", "swing_allreduce"),
+    ("all_gather", "doubling_ag"),
+    ("reduce_scatter", "halving_rs"),
+]:
+    register_algorithm(_coll, _name, supports=algos.is_power_of_two)
+del _coll, _name
 
 
 def estimate_us(algo_name: str, n: int, nbytes: int,
@@ -64,6 +124,11 @@ def estimate_us(algo_name: str, n: int, nbytes: int,
     wait. The β term counts wire bytes, which fusion never changes.
     """
     from repro.core import passes  # local import: passes imports dsl only
+    if not supports(algo_name, n):
+        raise ValueError(
+            f"algorithm {algo_name!r} does not support n={n} ranks "
+            f"(geometry-restricted registration); choose() skips it "
+            f"automatically — query a supported candidate instead")
     prog = passes.optimize(algos.REGISTRY[algo_name](n),
                            passes.DEFAULT_OPT_LEVEL if opt_level is None
                            else opt_level, n)
@@ -360,6 +425,6 @@ def choose(collective: str, *, n: int, nbytes: int,
         hit = table.lookup(collective, nbytes)
         if hit is not None:
             return hit
-    cands = CANDIDATES[collective]
+    cands = [a for a in CANDIDATES[collective] if supports(a, n)]
     return min(cands, key=lambda a: estimate_us(a, n, nbytes, link,
                                                 opt_level=opt_level))

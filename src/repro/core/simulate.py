@@ -182,10 +182,13 @@ def _rebuild_executor(trace: "trace_mod.Trace", algo: str, level: int,
 
     builder = algos.REGISTRY.get(algo)
     if builder is None:
+        from repro.core import selector as sel
+        cands = sel.CANDIDATES.get(trace.collective)
+        hint = (f"registry candidates for {trace.collective!r}: {cands}"
+                if cands else f"candidates: {sorted(algos.REGISTRY)}")
         raise ValueError(
             f"whatif cannot rebuild algorithm {algo!r}: not in "
-            f"algorithms.REGISTRY (candidates: "
-            f"{sorted(algos.REGISTRY)})")
+            f"algorithms.REGISTRY ({hint})")
     prog = passes.optimize(builder(trace.n), level, trace.n)
     n_in = prog.chunks[prog.in_buffer]
     chunk_rows = max(1, -(-trace.rows_in // n_in))   # pad up if needed

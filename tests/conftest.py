@@ -2,14 +2,16 @@
 
 The collective-kernel tests emulate a small multi-device TPU slice on CPU
 (Pallas interpret mode needs real XLA host devices to shard over). We pin
-a *small* count (8) here — NOT the 512-device production mesh, which is
-set exclusively inside ``repro/launch/dryrun.py`` per its own process.
+a *small* count (16 — enough for the 4x4 hierarchical mesh and the n=16
+registry tests; every test slices ``jax.devices()[:n]``) — NOT the
+512-device production mesh, which is set exclusively inside
+``repro/launch/dryrun.py`` per its own process.
 
 Must run before the first ``import jax`` anywhere in the test session.
 """
 import os
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 
 # hypothesis is absent from the minimal CI image; install the vendored
 # shim (tests/_hypothesis_shim.py) so the property tests run instead of
@@ -50,3 +52,14 @@ def mesh2x4():
 @pytest.fixture(scope="session")
 def mesh4():
     return Mesh(np.asarray(jax.devices()[:4]), ("x",))
+
+
+@pytest.fixture(scope="session")
+def mesh16():
+    return Mesh(np.asarray(jax.devices()[:16]), ("x",))
+
+
+@pytest.fixture(scope="session")
+def mesh4x4():
+    return Mesh(np.asarray(jax.devices()[:16]).reshape(4, 4),
+                ("node", "local"))

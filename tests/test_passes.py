@@ -74,6 +74,40 @@ def test_optimized_bit_equivalent(name, n):
 
 
 # ---------------------------------------------------------------------------
+# widened registry (PR 8): log-step algorithms vs their ring baselines,
+# n in {2, 4, 8, 16}, every opt level
+# ---------------------------------------------------------------------------
+NEW_VS_BASELINE = [
+    ("halving_rs", "ring_rs"),
+    ("doubling_ag", "ring_ag"),
+    ("allreduce_rd", "allreduce_ring"),
+    ("swing_allreduce", "allreduce_ring"),
+]
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+@pytest.mark.parametrize("name,baseline", NEW_VS_BASELINE)
+def test_new_algorithms_match_ring_baselines(name, baseline, n):
+    """Each log-step algorithm computes the same collective as the ring
+    family it competes against in the selector. Integer-valued payloads
+    keep float sums exact, so a different reduction order cannot blur
+    the bit-for-bit comparison at any opt level."""
+    prog, ref = algos.REGISTRY[name](n), algos.REGISTRY[baseline](n)
+    assert ref.chunks[ref.in_buffer] == prog.chunks[prog.in_buffer]
+    mesh = _mesh(n)
+    n_in = prog.chunks[prog.in_buffer]
+    rows = n_in * 2 * passes.SPLIT_FACTOR
+    x = jnp.asarray(np.random.RandomState(n).randint(
+        -8, 8, (n, rows, 8)), jnp.float32)
+
+    want = _run_xla(ref, x, mesh, opt_level=0)
+    for level in LEVELS:
+        got = _run_xla(prog, x, mesh, opt_level=level)
+        np.testing.assert_array_equal(
+            got, want, err_msg=f"{name} O{level} vs {baseline} O0 (n={n})")
+
+
+# ---------------------------------------------------------------------------
 # per-pass instruction-count contracts
 # ---------------------------------------------------------------------------
 def test_coalesce_merges_allpairs_round():

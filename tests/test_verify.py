@@ -21,6 +21,9 @@ COLLECTIVE_OF = {
     "allreduce_1pa": "all_reduce", "allreduce_2pa": "all_reduce",
     "allreduce_ring": "all_reduce", "alltoall": "all_to_all",
     "broadcast_allpairs": "broadcast",
+    # PR 8 widened registry (power-of-two geometries)
+    "halving_rs": "reduce_scatter", "doubling_ag": "all_gather",
+    "allreduce_rd": "all_reduce", "swing_allreduce": "all_reduce",
 }
 
 
@@ -34,7 +37,7 @@ def _build(name, n):
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("name", sorted(algos.REGISTRY))
 @pytest.mark.parametrize("level", [0, 2, 3])
-@pytest.mark.parametrize("n", [2, 4, 8])
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
 def test_registry_verifies_clean(name, level, n):
     """Every algorithm x opt level x size passes all checks, including
     the per-collective semantic specification."""
