@@ -1,0 +1,235 @@
+"""Seeded virtual-clock load generator for the serving layer.
+
+Drives :class:`repro.serve.router.Router` /
+:class:`repro.serve.scheduler.Scheduler` with synthetic traffic —
+Poisson arrivals, Zipf-ish prompt lengths, uniform generation budgets,
+all from one ``np.random.default_rng(seed)`` — on the scheduler's
+virtual clock, so a trace replays *identically* on every run and on
+every machine: same routing, same batching, same emitted tokens, same
+TTFT/throughput numbers.
+
+Two consumers:
+
+* ``run.py --serve`` (→ ``scripts/check.sh --serve``):
+  :func:`loadgen_smoke` — a seconds-fast 2-replica × tp=2 load test
+  over the §4.4 plan-file round trip (compile once → export →
+  every replica loads the same JSON set), asserting zero dropped
+  requests and that every request's token stream is bit-identical to a
+  sequential single-request run.
+* ``run.py --json``: :func:`serve_points` — the same run recorded as
+  ``serve_*`` points (TTFT/wait percentiles in virtual seconds,
+  tokens/virtual-s, per-bucket step + plan-hit counts, the
+  continuous-batching speedup over the sequential baseline) into
+  ``BENCH_collectives.json``, git-SHA/timestamp stamped like every
+  other point.
+
+The bit-identity assertion is the load generator's whole reason to
+exist: continuous batching is only a pure throughput optimization if
+co-batching requests never changes a single token (scheduler module
+docstring lays out why each decode-step op is row-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro import configs
+from repro.serve.engine import ServeConfig
+from repro.serve.router import Router, build_replicas
+from repro.serve.scheduler import Request
+
+__all__ = ["TrafficConfig", "synth_trace", "run_load",
+           "sequential_baseline", "run_serve_load", "serve_points",
+           "loadgen_smoke"]
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    """Knobs of the synthetic trace. ``rate_rps`` is Poisson arrival
+    intensity in requests per *virtual* second; ``zipf_a`` shapes the
+    prompt-length distribution (heavy head of short prompts, rare long
+    ones — the shape that makes chunked prefill earn its keep)."""
+    seed: int = 0
+    n_requests: int = 20
+    rate_rps: float = 4.0
+    zipf_a: float = 1.5
+    max_prompt: int = 12
+    max_new: int = 8
+    temperature: float = 0.0
+    step_s: float = 0.05               # virtual cost of one decode step
+
+
+def synth_trace(tcfg: TrafficConfig, vocab: int) -> List[Request]:
+    """The seeded trace: exponential inter-arrival gaps (Poisson
+    process at ``rate_rps``), Zipf prompt lengths clamped to
+    ``max_prompt``, uniform ``1..max_new`` generation budgets, uniform
+    random token ids. Same ``tcfg`` + ``vocab`` → same trace, always."""
+    rng = np.random.default_rng(tcfg.seed)
+    t = 0.0
+    reqs: List[Request] = []
+    for i in range(tcfg.n_requests):
+        t += float(rng.exponential(1.0 / tcfg.rate_rps))
+        plen = int(min(rng.zipf(tcfg.zipf_a), tcfg.max_prompt))
+        n_new = int(rng.integers(1, tcfg.max_new + 1))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=n_new,
+                            arrival_s=round(t, 6),
+                            temperature=tcfg.temperature, seed=i))
+    return reqs
+
+
+def run_load(target, trace: List[Request], *, step_s: float,
+             max_ticks: int = 100_000) -> list:
+    """Drive a Scheduler or Router through a trace on the virtual
+    clock. Requests are submitted only once their ``arrival_s`` has
+    passed — so the router's least-loaded choice sees arrival-time
+    load, exactly like a front door would — idle gaps fast-forward to
+    the next arrival, and each tick costs ``step_s * (1 +
+    micro_steps)``. Returns the list of per-tick ``TickInfo`` (the
+    property tests assert invariants over it)."""
+    pending = deque(sorted(trace, key=lambda r: (r.arrival_s, r.rid)))
+    infos: list = []
+    while pending or target.outstanding():
+        if len(infos) >= max_ticks:
+            raise RuntimeError(
+                f"load run did not drain in {max_ticks} ticks")
+        while pending and pending[0].arrival_s <= target.now:
+            target.submit(pending.popleft())
+        if target.n_active == 0 and target.outstanding() == 0 and pending:
+            target.advance_to(pending[0].arrival_s)
+            continue
+        info = target.tick()
+        infos.append(info)
+        target.advance(step_s * (1 + info.micro_steps))
+    return infos
+
+
+def sequential_baseline(sched, trace: List[Request], *,
+                        step_s: float) -> Dict[int, List[int]]:
+    """The ground truth the load test compares against: the SAME
+    requests, one at a time on a fresh single scheduler — each runs
+    with the whole batch to itself, so batching effects are impossible
+    by construction. Returns rid -> token stream."""
+    for req in trace:
+        sched.submit(dataclasses.replace(req, arrival_s=0.0))
+        sched.run_until_drained(step_s=step_s)
+    return {req.rid: list(sched.streams[req.rid]) for req in trace}
+
+
+def _serve_model():
+    """The smoke model: qwen3-1.7b shrunk by ``configs.reduced`` —
+    d_model=128, vocab=512 (divisible by tp=2/4 for the vocab-sharded
+    logits plan), float32, 2 layers."""
+    return configs.reduced(configs.get_config("qwen3-1.7b"))
+
+
+def run_serve_load(tcfg: Optional[TrafficConfig] = None, *,
+                   n_replicas: int = 2, tp: int = 2, batch: int = 4,
+                   mode: str = "explicit", prefill_chunk: int = 4,
+                   plan_dir=None) -> dict:
+    """The full load test: build ``n_replicas`` × ``tp`` replicas from
+    ONE exported plan-file set, drive the seeded trace through the
+    router, then verify every stream bit-identical against the
+    sequential single-request baseline (itself a replica loaded from
+    the same files). Returns the summary dict the smoke and the bench
+    points both render."""
+    tcfg = tcfg or TrafficConfig()
+    cfg = _serve_model()
+    scfg = ServeConfig(batch=batch, max_kv=64, mode=mode)
+    plan_dir = plan_dir or tempfile.mkdtemp(prefix="repro_plan_set_")
+    trace = synth_trace(tcfg, cfg.vocab)
+
+    t0 = time.perf_counter()
+    router = build_replicas(cfg, scfg, n_replicas=n_replicas, tp=tp,
+                            plan_dir=plan_dir, mode=mode,
+                            prefill_chunk=prefill_chunk)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ticks = len(run_load(router, trace, step_s=tcfg.step_s))
+    load_s = time.perf_counter() - t0
+
+    m = router.metrics()
+    rep = router.plan_report()
+
+    # baseline replica: same checkpoint key, same exported plan files
+    base = build_replicas(cfg, scfg, n_replicas=1, tp=tp,
+                          plan_dir=plan_dir, mode=mode,
+                          prefill_chunk=prefill_chunk)
+    base_streams = sequential_baseline(base.replicas[0], trace,
+                                       step_s=tcfg.step_s)
+    streams = router.streams
+    mismatched = [r.rid for r in trace
+                  if streams.get(r.rid) != base_streams[r.rid]]
+    base_m = base.metrics()
+
+    # trace-time plan-family hits per replica (explicit mode only):
+    # how many bucketed compiles each replica's ONE loaded family served
+    plan_hits: List[dict] = []
+    for r in router.replicas:
+        fam = (r.eng.decode_plans or {}).get("layer_allreduce")
+        hits = getattr(fam, "hits", None)
+        plan_hits.append({int(k): int(v) for k, v in hits.items()}
+                         if hits else {})
+
+    return dict(
+        model=cfg.name, replicas=n_replicas, tp=tp, batch=batch,
+        mode=mode, modes=rep["modes"], degraded=rep["degraded"],
+        seed=tcfg.seed, requests=len(trace),
+        completed=m["completed"], dropped=m["dropped"],
+        bit_identical=not mismatched, mismatched=mismatched,
+        tokens=m["tokens"], ticks=ticks,
+        tokens_per_vs=m["tokens_per_vs"],
+        ttft_vs=m["ttft_vs"], wait_vs=m["wait_vs"],
+        bucket_steps=m["bucket_steps"], plan_hits=plan_hits,
+        health=rep["health"],
+        seq_tokens_per_vs=base_m["tokens_per_vs"],
+        batching_speedup=round(
+            m["tokens_per_vs"] / max(base_m["tokens_per_vs"], 1e-9), 3),
+        per_replica_completed=[p["completed"] for p in m["per_replica"]],
+        build_s=round(build_s, 3), load_s=round(load_s, 3))
+
+
+def serve_points(points: list, tcfg: Optional[TrafficConfig] = None) -> dict:
+    """Append the ``serve_*`` bench points for ``run.py --json``.
+    Raises if the load test ever drops a request or emits a stream that
+    differs from the sequential baseline — a bench run with broken
+    serving must not produce a plausible-looking artifact."""
+    s = run_serve_load(tcfg)
+    if s["dropped"] or s["completed"] != s["requests"]:
+        raise AssertionError(f"serve load dropped requests: {s}")
+    if not s["bit_identical"]:
+        raise AssertionError(
+            f"serve streams diverged from sequential baseline for rids "
+            f"{s['mismatched']}")
+    points.append(dict(
+        bench="serve_load", model=s["model"], replicas=s["replicas"],
+        tp=s["tp"], batch=s["batch"], mode=s["mode"], seed=s["seed"],
+        requests=s["requests"], completed=s["completed"],
+        dropped=s["dropped"], bit_identical=s["bit_identical"],
+        tokens=s["tokens"], tokens_per_vs=s["tokens_per_vs"],
+        ttft_vs_p50=s["ttft_vs"]["p50"], ttft_vs_p95=s["ttft_vs"]["p95"],
+        ttft_vs_max=s["ttft_vs"]["max"],
+        wait_vs_p50=s["wait_vs"]["p50"], wait_vs_p95=s["wait_vs"]["p95"],
+        wait_vs_max=s["wait_vs"]["max"],
+        bucket_steps=s["bucket_steps"], plan_hits=s["plan_hits"],
+        degraded=s["degraded"]))
+    points.append(dict(
+        bench="serve_batching_speedup", model=s["model"],
+        replicas=s["replicas"], tp=s["tp"], batch=s["batch"],
+        mode=s["mode"], tokens_per_vs=s["tokens_per_vs"],
+        seq_tokens_per_vs=s["seq_tokens_per_vs"],
+        speedup=s["batching_speedup"]))
+    return s
+
+
+def loadgen_smoke() -> dict:
+    """``run.py --serve`` entry: the default seeded load test, with the
+    same hard assertions as the bench points."""
+    s = serve_points([])
+    return s

@@ -36,6 +36,13 @@ also records the verifier/recovery overhead point. Wired into
 replay it within tolerance, fit a LinkModel and build a trace-driven
 TuningTable. Wired into ``scripts/check.sh --profile``.
 
+``--serve``: seeded virtual-clock serving load test
+(``benchmarks/loadgen.py``): 2 engine replicas x tp=2, each loaded
+from the SAME exported plan-file set, behind the least-loaded router;
+~20 Poisson/Zipf requests, zero drops, every token stream asserted
+bit-identical to a sequential single-request run. Wired into
+``scripts/check.sh --serve``.
+
 Every ``--json`` payload (and each point in it) is stamped with the
 git SHA and an ISO timestamp, and a copy is kept under
 ``BENCH_history/`` (newest ``_HISTORY_KEEP`` runs) so points remain
@@ -141,6 +148,23 @@ def main(argv=None) -> None:
               f"{ov['compile_ms_off']}ms); replay overhead "
               f"{ov['replay_overhead_us_per_token']}us/token — chaos OK")
         return
+    if "--serve" in argv:
+        from benchmarks import loadgen
+
+        s = loadgen.loadgen_smoke()
+        print(f"serve_load: {s['replicas']} replicas x tp={s['tp']} "
+              f"(modes={s['modes']}, degraded={s['degraded']}) served "
+              f"{s['completed']}/{s['requests']} requests, "
+              f"{s['dropped']} dropped, {s['tokens']} tokens at "
+              f"{s['tokens_per_vs']} tok/vs "
+              f"(sequential {s['seq_tokens_per_vs']}, "
+              f"batching {s['batching_speedup']}x)")
+        print(f"serve_load: ttft_vs p50={s['ttft_vs']['p50']:.3f} "
+              f"p95={s['ttft_vs']['p95']:.3f} "
+              f"max={s['ttft_vs']['max']:.3f}, bucket_steps="
+              f"{s['bucket_steps']}, plan_hits={s['plan_hits']} "
+              f"— streams bit-identical to sequential baseline OK")
+        return
     if "--profile" in argv:
         from benchmarks import profile
 
@@ -179,6 +203,11 @@ def main(argv=None) -> None:
         from benchmarks import cross_hw
         cross_hw.sweep_points(payload["points"])
         cross_hw.hierarchical_points(payload["points"])
+        # serving: seeded router load test over the exported plan-file
+        # set — TTFT/throughput in virtual seconds + per-bucket plan
+        # hits, asserted bit-identical to the sequential baseline
+        from benchmarks import loadgen
+        serve = loadgen.serve_points(payload["points"])
         meta = _stamp_payload(payload)
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
@@ -218,6 +247,11 @@ def main(argv=None) -> None:
               f"n={sorted({p['n'] for p in sweep})}, log-step winners "
               f"{log_wins}; hier-vs-flat up to {best}x on the 4x4 "
               f"ICIxDCN model")
+        print(f"serve: {serve['replicas']}x tp={serve['tp']} router "
+              f"served {serve['completed']}/{serve['requests']} "
+              f"({serve['tokens_per_vs']} tok/vs, batching "
+              f"{serve['batching_speedup']}x, ttft p95 "
+              f"{serve['ttft_vs']['p95']:.3f}vs) — bit-identical OK")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

@@ -24,6 +24,12 @@
 #                               # host-only): capture a ring-allreduce
 #                               # trace, replay within tolerance, fit
 #                               # a LinkModel + trace-driven TuningTable
+#   scripts/check.sh --serve    # seeded serving load test (seconds-
+#                               # fast): 2 replicas x tp=2 loaded from
+#                               # one exported plan-file set behind the
+#                               # router; ~20 virtual-clock requests,
+#                               # zero drops, streams bit-identical to
+#                               # a sequential single-request run
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -78,6 +84,11 @@ fi
 if [[ "${1:-}" == "--profile" ]]; then
   shift
   python benchmarks/run.py --profile "$@"
+  exit 0
+fi
+if [[ "${1:-}" == "--serve" ]]; then
+  shift
+  python benchmarks/run.py --serve "$@"
   exit 0
 fi
 python -m pytest -x -q "$@"

@@ -47,12 +47,14 @@ from repro.core import selector as sel
 from repro.core import verify as verify_mod
 from repro.core.comm import (BucketedPlan, Communicator, ExecutionPlan,
                              HierarchicalCommunicator, HierarchicalPlan,
-                             default_backend, default_communicator)
+                             default_backend, default_communicator,
+                             export_plan_set, load_plan_set)
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all",
     "broadcast", "hierarchical_all_reduce", "tree_all_reduce",
     "default_backend", "compile_plan", "load_plan", "verify_plan",
+    "export_plan_set", "load_plan_set",
     "communicator", "Communicator", "ExecutionPlan", "BucketedPlan",
     "HierarchicalCommunicator", "HierarchicalPlan",
 ]
@@ -77,8 +79,9 @@ def load_plan(source, *, verify: str = "strict"):
     dispatching on the payload's ``kind``. Loaded programs are
     **verified** before the executor lowering is prepared
     (``verify='off'|'warn'|'strict'``) — plan files cross a trust
-    boundary and are validated, not trusted (docs/robustness.md)."""
-    import json
+    boundary and are validated, not trusted (docs/robustness.md).
+    Directories of plans exported together load via
+    :func:`load_plan_set` (the §4.4 replica deployment artifact)."""
     import os
 
     text = source
@@ -86,12 +89,7 @@ def load_plan(source, *, verify: str = "strict"):
             isinstance(source, str) and not source.lstrip().startswith("{")):
         with open(source) as f:
             text = f.read()
-    kind = json.loads(text).get("kind")
-    if kind == "bucketed_plan":
-        return BucketedPlan.from_json(text, verify=verify)
-    if kind == "hierarchical_plan":
-        return HierarchicalPlan.from_json(text, verify=verify)
-    return ExecutionPlan.from_json(text, verify=verify)
+    return comm_lib.plan_from_json(text, verify=verify)
 
 
 def verify_plan(plan, *, num_ranks: Optional[int] = None):

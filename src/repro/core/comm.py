@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import pathlib
 import warnings
 from typing import Any, Dict, Optional, Tuple
 
@@ -59,6 +60,7 @@ __all__ = [
     "HierarchicalCommunicator", "HierarchicalPlan",
     "default_communicator", "default_backend",
     "reset_default_communicators", "hierarchical_all_reduce",
+    "plan_from_json", "export_plan_set", "load_plan_set",
     "PLAN_FORMAT_VERSION",
 ]
 
@@ -1187,6 +1189,88 @@ class HierarchicalCommunicator:
         return (f"HierarchicalCommunicator(local={self.local.axis!r}, "
                 f"node={self.node_axis!r}, plans={len(self._plans)}, "
                 f"stats={self.stats})")
+
+
+# ---------------------------------------------------------------------------
+# plan sets: the §4.4 deployment artifact (compile once, ship JSON files)
+# ---------------------------------------------------------------------------
+def plan_from_json(text: str, *, verify: str = "strict"):
+    """Load any plan flavor from its JSON payload, dispatching on the
+    payload's ``kind`` (``bucketed_plan`` / ``hierarchical_plan`` /
+    plain :class:`ExecutionPlan`). Loaded programs are re-verified
+    before the executor lowering is prepared — plan files cross a trust
+    boundary and are validated, not trusted (docs/robustness.md)."""
+    kind = json.loads(text).get("kind")
+    if kind == "bucketed_plan":
+        return BucketedPlan.from_json(text, verify=verify)
+    if kind == "hierarchical_plan":
+        return HierarchicalPlan.from_json(text, verify=verify)
+    return ExecutionPlan.from_json(text, verify=verify)
+
+
+def export_plan_set(plans: Dict[str, Any], path) -> pathlib.Path:
+    """Write a NAMED set of compiled plans as one JSON file per plan
+    plus a ``plan_set.json`` manifest — the paper's §4.4 deployment
+    model made concrete: compile the decode plans once on a planner
+    host, ship the directory to every serving replica, and each replica
+    replays the identical programs (``load_plan_set``) without running
+    selection, passes, or verification-compile again.
+
+    ``plans`` is any ``{name: plan}`` dict (e.g. the output of
+    :func:`repro.distributed.step.compile_decode_plans`). Returns the
+    manifest path."""
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    entries = {}
+    for name, plan in sorted(plans.items()):
+        if not hasattr(plan, "to_json"):
+            raise TypeError(
+                f"plan set entry {name!r} is {type(plan).__name__}, which "
+                f"has no to_json(): only ExecutionPlan/BucketedPlan/"
+                f"HierarchicalPlan belong in a plan set")
+        text = plan.to_json()
+        fname = f"{name}.json"
+        (path / fname).write_text(text)
+        entries[name] = {"file": fname,
+                         "kind": json.loads(text).get("kind",
+                                                      "execution_plan")}
+    manifest = {"version": PLAN_FORMAT_VERSION, "kind": "plan_set",
+                "plans": entries}
+    out = path / "plan_set.json"
+    out.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    return out
+
+
+def load_plan_set(path, *, verify: str = "strict") -> Dict[str, Any]:
+    """Load a plan set written by :func:`export_plan_set` (pass the
+    directory or the manifest path). Every plan file is dispatched on
+    its ``kind`` and re-verified on load; the returned ``{name: plan}``
+    dict drops straight into ``Engine(decode_plans=...)`` /
+    ``make_serve_step(plans=...)`` — fresh plan objects per call, so
+    each replica keeps its own bucket-hit counters like a real per-host
+    plan load would."""
+    p = pathlib.Path(path)
+    if p.is_dir():
+        p = p / "plan_set.json"
+    if not p.exists():
+        raise ValueError(
+            f"no plan set at {p}: expected a plan_set.json manifest "
+            f"written by export_plan_set()")
+    d = json.loads(p.read_text())
+    if d.get("kind") != "plan_set":
+        raise ValueError(
+            f"{p} is not a plan-set manifest (kind={d.get('kind')!r}); "
+            f"single plan files load via api.load_plan")
+    _check_version(d, "plan set manifest")
+    out = {}
+    for name, ent in _field(d, "plans", "plan set manifest").items():
+        f = p.parent / _field(ent, "file", f"plan set entry {name!r}")
+        if not f.exists():
+            raise ValueError(
+                f"plan set entry {name!r} points at missing file {f}: "
+                f"the exported directory is incomplete")
+        out[name] = plan_from_json(f.read_text(), verify=verify)
+    return out
 
 
 # ---------------------------------------------------------------------------

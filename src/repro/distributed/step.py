@@ -30,9 +30,9 @@ from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.train import optimizer as opt
 
-__all__ = ["make_train_step", "make_serve_step", "init_sharded",
-           "make_dp_communicators", "TPDecodeComms", "compile_decode_plans",
-           "local_batch", "slot_buckets"]
+__all__ = ["make_train_step", "make_serve_step", "make_sched_step",
+           "init_sharded", "make_dp_communicators", "TPDecodeComms",
+           "compile_decode_plans", "local_batch", "slot_buckets"]
 
 
 def _dp_axes(mesh: Mesh, ax: shd.MeshAxes) -> tuple[str, ...]:
@@ -351,7 +351,8 @@ class TPDecodeComms:
 def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
                     batch: int, max_kv: int, donate: bool = True,
                     fsdp: bool = False, kv_quant: bool = False,
-                    mode: str = "auto", comm=None, manual_dp: bool = True):
+                    mode: str = "auto", comm=None, plans=None,
+                    manual_dp: bool = True):
     """jit'd one-token decode step bound to mesh shardings.
 
     serve_step(params, cache, tokens, pos) -> (logits, cache)
@@ -384,7 +385,12 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
 
     ``comm``: the TP :class:`~repro.core.comm.Communicator` owning the
     decode plans (the engine passes its own so init-compiled plans are
-    shared); built here when omitted.
+    shared); built here when omitted. ``plans``: an already-compiled
+    (or plan-file-loaded, see ``comm.load_plan_set``) decode plan dict
+    in the :func:`compile_decode_plans` shape — pass it so every step
+    built for this engine replays the SAME plan objects (shared
+    bucket-hit counters, and for replicas the §4.4 ship-the-plan-file
+    deployment model); compiled here when omitted.
     """
     pspecs = _pspecs(cfg, mesh, ax, fsdp)
     psh = shd.shardings_for(pspecs, mesh)
@@ -448,7 +454,8 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
     if comm is None:
         comm = comm_lib.Communicator(ax.model, n=tp,
                                      backend=comm_lib.default_backend())
-    plans = compile_decode_plans(cfg, comm, batch_local=b_local, tp=tp)
+    if plans is None:
+        plans = compile_decode_plans(cfg, comm, batch_local=b_local, tp=tp)
     comms = TPDecodeComms(cfg, ax.model, tp,
                           hidden_plan=plans["layer_allreduce"],
                           logits_plan=plans.get("logits_allgather"),
@@ -473,6 +480,131 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
         in_shardings=(None, csh_x, tsh, None),
         out_shardings=(NamedSharding(mesh, logit_spec), csh_x),
         donate_argnums=(1,) if donate else (),
+    ), cspecs_x
+
+
+def _mask_slots(new_cache, old_cache, active):
+    """Per-slot cache select for the scheduler step: inactive slots keep
+    their old cache rows bit-exactly (the computed updates for those
+    rows are discarded). Every decode-cache leaf carries the batch at
+    axis 1 — ``(groups, batch, ...)``, see ``transformer.init_cache``."""
+    def sel(new, old):
+        m = active.reshape((1, active.shape[0]) + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+    return jax.tree.map(sel, new_cache, old_cache)
+
+
+def make_sched_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
+                    batch: int, max_kv: int, kv_quant: bool = False,
+                    mode: str = "auto", comm=None, plans=None,
+                    manual_dp: bool = True):
+    """jit'd continuous-batching decode step (the scheduler hot path).
+
+    sched_step(params, cache, tokens, pos, active) -> (logits, cache)
+
+    Differs from :func:`make_serve_step` in exactly the two ways
+    continuous batching needs:
+
+    * ``pos`` is a ``(batch,)`` int32 vector — every slot decodes (or
+      chunk-prefills) at its own depth (per-row RoPE, cache write, and
+      validity mask in ``blocks.decode_attention``);
+    * ``active`` is a ``(batch,)`` bool mask — inactive slots' cache
+      rows pass through bit-exactly, so chunked-prefill micro-steps can
+      advance a subset of slots while decode slots hold still, and
+      freed slots carry stale state harmlessly.
+
+    Because every per-row op in the decode step is row-independent
+    (einsums contract within a row, softmax/rms_norm are per-row, and
+    the replayed collectives are elementwise across rows — the MoE
+    all_to_all is lossless-capacity so co-batched rows can never evict
+    each other's tokens), a request's token stream is bit-identical no
+    matter which other slots it shares a step with — the property
+    ``tests/test_scheduler.py`` pins.
+
+    The batch must NOT be DP-sharded: one scheduler owns one replica's
+    slots; data-parallel scale-out is the Router's job (one replica per
+    device slice, each replaying the same exported plan set).
+    ``plans``: pass the engine's init-compiled plan family so every
+    bucketed step function replays the SAME plans (one set of bucket
+    hit counters; §5.2 compile-once contract) instead of compiling its
+    own per-bucket family.
+    """
+    b_local, batch_sharded = local_batch(mesh, ax, batch)
+    if batch_sharded:
+        raise ValueError(
+            "make_sched_step keeps the batch unsharded (slots live on one "
+            "replica); fan out replicas with serve.router instead of "
+            "DP-sharding the scheduler batch")
+    pspecs = _pspecs(cfg, mesh, ax, False)
+    psh = shd.shardings_for(pspecs, mesh)
+    kv_lens = [min(w, max_kv) if w is not None else max_kv
+               for w in tf.layer_windows(cfg)]
+    cspecs = shd.cache_pspecs(cfg, mesh, ax, batch=batch, kv_lens=kv_lens)
+    if kv_quant and "k" in cspecs:
+        cspecs = dict(cspecs,
+                      k_scale=list(cspecs["k"]), v_scale=list(cspecs["v"]))
+    tsh = NamedSharding(mesh, P(None))
+
+    if mode == "auto":
+        csh = shd.shardings_for(cspecs, mesh)
+
+        def step(params, cache, tokens, pos, active):
+            logits, new_cache = tf.decode_step(params, cfg, cache,
+                                               tokens, pos)
+            return logits, _mask_slots(new_cache, cache, active)
+
+        return jax.jit(
+            step,
+            in_shardings=(psh, csh, tsh, tsh, tsh),
+            out_shardings=(None, csh),
+        ), cspecs
+
+    if mode != "explicit":
+        raise ValueError(mode)
+
+    ok, why = shd.explicit_decode_supported(cfg, mesh, ax)
+    if not ok:
+        raise ValueError(f"mode='explicit' unsupported here: {why}")
+    dp = _dp_axes(mesh, ax)
+    manual = {ax.model} | (set(dp) if manual_dp else set())
+    if set(mesh.axis_names) - manual:
+        from repro import compat
+        if not compat.HAS_PARTIAL_MANUAL_SHARD_MAP:
+            raise NotImplementedError(
+                "mode='explicit' with auto (GSPMD) mesh axes needs "
+                "partial-manual shard_map; keep manual_dp=True so the "
+                "step is fully manual (mirrors make_serve_step's guard)")
+
+    tp = int(mesh.shape[ax.model])
+    pspecs_x = shd.explicit_decode_pspecs(cfg, mesh, ax)
+    cspecs_x = shd.explicit_decode_cache_pspecs(
+        cfg, mesh, ax, batch=batch, kv_lens=kv_lens, kv_quant=kv_quant)
+    csh_x = shd.shardings_for(cspecs_x, mesh)
+    if comm is None:
+        comm = comm_lib.Communicator(ax.model, n=tp,
+                                     backend=comm_lib.default_backend())
+    if plans is None:
+        plans = compile_decode_plans(cfg, comm, batch_local=b_local, tp=tp)
+    comms = TPDecodeComms(cfg, ax.model, tp,
+                          hidden_plan=plans["layer_allreduce"],
+                          logits_plan=plans.get("logits_allgather"),
+                          moe_plan=plans.get("moe_alltoall"))
+
+    def local_step(params, cache, tokens, pos, active):
+        logits, new_cache = tf.decode_step(params, cfg, cache, tokens, pos,
+                                           comms=comms)
+        return logits, _mask_slots(new_cache, cache, active)
+
+    mapped = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(pspecs_x, cspecs_x, P(None), P(None), P(None)),
+        out_specs=(P(None, None), cspecs_x),
+        axis_names=manual, check_vma=False)
+
+    return jax.jit(
+        mapped,
+        in_shardings=(None, csh_x, tsh, tsh, tsh),
+        out_shardings=(NamedSharding(mesh, P(None, None)), csh_x),
     ), cspecs_x
 
 

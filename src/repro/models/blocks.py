@@ -44,11 +44,14 @@ def rope(positions, head_dim: int, theta: float):
 
 
 def apply_rope(x, cos, sin):
-    """x: (..., seq, head_dim); cos/sin: (seq, head_dim/2)."""
+    """x: (..., seq, head_dim); cos/sin: (seq, head_dim/2), or already
+    broadcast to ``x.ndim`` (vector-pos decode: (b, 1, 1, head_dim/2),
+    one rotation angle per batch row)."""
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    shape = (1,) * (x.ndim - 2) + cos.shape
-    cos = cos.reshape(shape)
-    sin = sin.reshape(shape)
+    if cos.ndim != x.ndim:
+        shape = (1,) * (x.ndim - 2) + cos.shape
+        cos = cos.reshape(shape)
+        sin = sin.reshape(shape)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
 
@@ -172,8 +175,11 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     """One-token decode with KV cache.
 
     x: (batch, 1, d_model); cache_k/v: (batch, nkv, max_kv, hd);
-    pos: scalar current position. Returns (out, new_k, new_v[,
-    new_k_scale, new_v_scale]).
+    pos: current position — a scalar shared by the whole batch, or a
+    ``(batch,)`` vector of per-slot positions (continuous batching:
+    every slot decodes at its own depth; RoPE, the cache write, and the
+    validity mask are then applied per row). Returns (out, new_k,
+    new_v[, new_k_scale, new_v_scale]).
 
     int8 KV quantization (§Perf hillclimb C): when the cache dtype is
     int8, new tokens are written as round(x/s·127) with a per-(batch,
@@ -205,21 +211,36 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
-    cos, sin = rope(pos[None], hd, cfg.rope_theta)
+    vec = jnp.ndim(pos) > 0                 # per-slot positions (batch,)
+    cos, sin = rope(pos if vec else pos[None], hd, cfg.rope_theta)
+    if vec:
+        # (b, hd/2) -> (b, 1, 1, hd/2): each slot rotates at its own pos
+        cos, sin = cos[:, None, None, :], sin[:, None, None, :]
     q = apply_rope(q, cos, sin)
     k_new = apply_rope(k_new, cos, sin)
 
     # ring-buffer update for windowed layers, linear for global layers
     slot = pos % max_kv if window is not None else pos
+    # vector pos writes via a per-row one-hot mask (b, 1, max_kv, 1):
+    # dynamic_update needs one index, every slot has its own
+    wmask = ((jnp.arange(max_kv)[None, :] == slot[:, None])
+             [:, None, :, None] if vec else None)
 
     def _write(cache, scales, val):
+        v = val[:, :, 0]
         if not quant:
+            if vec:
+                return jnp.where(wmask, v[:, :, None, :], cache), scales
             return jax.lax.dynamic_update_index_in_dim(
-                cache, val[:, :, 0], slot, axis=2), scales
-        sc = (jnp.max(jnp.abs(val[:, :, 0].astype(jnp.float32)),
+                cache, v, slot, axis=2), scales
+        sc = (jnp.max(jnp.abs(v.astype(jnp.float32)),
                       axis=-1, keepdims=True) / 127.0 + 1e-8)
-        qv = jnp.clip(jnp.round(val[:, :, 0].astype(jnp.float32) / sc),
+        qv = jnp.clip(jnp.round(v.astype(jnp.float32) / sc),
                       -127, 127).astype(jnp.int8)
+        if vec:
+            return (jnp.where(wmask, qv[:, :, None, :], cache),
+                    jnp.where(wmask, sc.astype(scales.dtype)[:, :, None, :],
+                              scales))
         cache = jax.lax.dynamic_update_index_in_dim(cache, qv, slot, axis=2)
         scales = jax.lax.dynamic_update_index_in_dim(
             scales, sc.astype(scales.dtype), slot, axis=2)
@@ -251,12 +272,14 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     k_pos = jnp.arange(max_kv)
     if window is not None:
         # ring buffer holds the last `max_kv` tokens; valid = within window
-        age = (slot - k_pos) % max_kv
-        valid = (age < jnp.minimum(pos + 1, max_kv))
+        age = ((slot[:, None] if vec else slot) - k_pos) % max_kv
+        lim = jnp.minimum(pos + 1, max_kv)
+        valid = age < (lim[:, None] if vec else lim)
     else:
-        valid = k_pos <= pos
-    logits = jnp.where(valid[None, None, None, None, :], logits,
-                       jnp.finfo(jnp.float32).min)
+        valid = k_pos <= (pos[:, None] if vec else pos)
+    vmask = (valid[:, None, None, None, :] if vec
+             else valid[None, None, None, None, :])
+    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
     if quant:
         probs = jax.nn.softmax(logits, axis=-1)
         # scale folds into probs (per key position) before the value dot
@@ -308,13 +331,16 @@ def _decode_attn_tp_shard(p: Params, q, cache_k, cache_v, pos, cfg,
         logits = jnp.einsum("bnsh,bnth->bnst", q, k_sel).astype(jnp.float32)
     logits *= hd ** -0.5
     k_pos = jnp.arange(max_kv)
+    vec = jnp.ndim(pos) > 0                 # per-slot positions (batch,)
     if window is not None:
-        age = (slot - k_pos) % max_kv
-        valid = (age < jnp.minimum(pos + 1, max_kv))
+        age = ((slot[:, None] if vec else slot) - k_pos) % max_kv
+        lim = jnp.minimum(pos + 1, max_kv)
+        valid = age < (lim[:, None] if vec else lim)
     else:
-        valid = k_pos <= pos
-    logits = jnp.where(valid[None, None, None, :], logits,
-                       jnp.finfo(jnp.float32).min)
+        valid = k_pos <= (pos[:, None] if vec else pos)
+    vmask = (valid[:, None, None, :] if vec
+             else valid[None, None, None, :])
+    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
     if quant:
         probs = jax.nn.softmax(logits, axis=-1)
         pscaled = probs * vs_sel[..., 0][:, :, None, :].astype(jnp.float32)

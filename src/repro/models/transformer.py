@@ -213,7 +213,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_kv: int, dtype=None):
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
-    """tokens: (b,) int32 (or (b, d) embeddings); pos: scalar int32.
+    """tokens: (b,) int32 (or (b, d) embeddings); pos: scalar int32, or
+    a (b,) int32 vector of per-slot positions (continuous batching —
+    see ``blocks.decode_attention``; the SSM/RWKV recurrences are
+    position-free, so only attention branches on it).
     Returns (logits (b, vocab) f32, new cache).
 
     ``comms`` — the per-layer TP/EP communication hook of the explicit

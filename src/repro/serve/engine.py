@@ -64,6 +64,48 @@ from repro.models.config import ModelConfig
 __all__ = ["ServeConfig", "Engine"]
 
 
+def _check_plan_set(cfg: ModelConfig, plans: dict, *, tp: int,
+                    batch_local: int) -> None:
+    """Validate a loaded decode-plan set against this engine's
+    config/mesh. The §4.4 deployment failure mode is shipping plan
+    files compiled for a different model, axis size, or batch — that
+    must degrade visibly (auto fallback + health counter) rather than
+    replay wrong programs. Raises ValueError with the mismatch."""
+    if tp <= 1:
+        raise ValueError("decode plans need a TP axis of size > 1")
+    ar = plans.get("layer_allreduce")
+    if ar is None:
+        raise ValueError(
+            f"plan set has no 'layer_allreduce' (names: {sorted(plans)})")
+
+    def dims(p):
+        if isinstance(p, comm_lib.BucketedPlan):
+            return p.n, p.cols, p.buckets[-1], p.dtype
+        return p.n, p.shape[1], p.shape[0], p.dtype
+
+    n, cols, top, dtype = dims(ar)
+    if n != tp:
+        raise ValueError(f"layer_allreduce compiled for axis size {n}; "
+                         f"this mesh has tp={tp}")
+    if cols != cfg.d_model:
+        raise ValueError(f"layer_allreduce compiled for d_model={cols}; "
+                         f"this config has {cfg.d_model}")
+    if dtype != cfg.dtype:
+        raise ValueError(f"layer_allreduce compiled for dtype {dtype}; "
+                         f"this config computes in {cfg.dtype}")
+    if top < batch_local:
+        raise ValueError(
+            f"layer_allreduce top bucket {top} < local batch "
+            f"{batch_local}: re-export the set with the serving batch")
+    if cfg.vocab % tp == 0 and "logits_allgather" not in plans:
+        raise ValueError("plan set missing 'logits_allgather' for the "
+                         "vocab-sharded logits path")
+    if (cfg.family == "moe" and cfg.moe.num_experts % tp == 0
+            and "moe_alltoall" not in plans):
+        raise ValueError("plan set missing 'moe_alltoall' for the MoE "
+                         "expert-parallel path")
+
+
 @dataclasses.dataclass
 class ServeConfig:
     batch: int = 8
@@ -86,7 +128,14 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, mesh, serve_cfg: ServeConfig,
                  ax: shd.MeshAxes = shd.MeshAxes(),
                  comm: Optional[comm_lib.Communicator] = None,
-                 mode: Optional[str] = None):
+                 mode: Optional[str] = None,
+                 decode_plans: Optional[dict] = None):
+        """``decode_plans``: an already-built decode plan set — typically
+        :func:`repro.core.comm.load_plan_set` output, the §4.4 replica
+        deployment model (compile once on a planner host, ship the JSON
+        files, every replica replays identical programs). Validated
+        against this config/mesh; a rejected set degrades to auto like
+        a plan-compile failure would. Omitted -> compiled here."""
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -95,6 +144,10 @@ class Engine:
         mode = mode if mode is not None else serve_cfg.mode
         if mode not in ("auto", "explicit"):
             raise ValueError(f"unknown serve mode {mode!r}")
+        #: the mode serving was configured for; ``self.mode`` is the mode
+        #: actually running — they diverge exactly when this replica is
+        #: degraded (router surfaces the difference per replica)
+        self.requested_mode = mode
         #: runtime guardrail counters; plan_report() merges these with
         #: the communicator's compile-side health (verified, recompiles)
         self.health = {"retries": 0, "fallbacks": 0, "faults_detected": 0,
@@ -117,7 +170,17 @@ class Engine:
         b_local, _ = local_batch(mesh, ax, serve_cfg.batch)
         self.decode_plans: dict = {}
         plan_err: Optional[Exception] = None
-        if tp > 1:
+        if decode_plans is not None:
+            try:
+                _check_plan_set(cfg, decode_plans, tp=tp,
+                                batch_local=b_local)
+                self.decode_plans = dict(decode_plans)
+            except Exception as e:   # mismatched/incomplete shipped set
+                plan_err = e
+                warnings.warn(
+                    f"loaded decode-plan set rejected ({e}); serving "
+                    f"without plan artifacts", stacklevel=2)
+        elif tp > 1:
             try:
                 self.decode_plans = compile_decode_plans(
                     cfg, self.comm, batch_local=b_local, tp=tp)
@@ -154,7 +217,8 @@ class Engine:
         self.active = np.zeros(serve_cfg.batch, bool)
 
     def _build_step(self, mode: str):
-        kw = dict(comm=self.comm) if mode == "explicit" else {}
+        kw = (dict(comm=self.comm, plans=self.decode_plans or None)
+              if mode == "explicit" else {})
         fn, _ = make_serve_step(
             self.cfg, self.mesh, self.ax, batch=self.scfg.batch,
             max_kv=self.scfg.max_kv, donate=self._donate, mode=mode,
@@ -292,7 +356,8 @@ class Engine:
             name: (tr.summary() if (tr := top_plan(p).last_trace)
                    is not None else None)
             for name, p in self.decode_plans.items()}
-        return dict(mode=self.mode, plans=cards,
+        return dict(mode=self.mode, requested_mode=self.requested_mode,
+                    degraded=self.mode != self.requested_mode, plans=cards,
                     predicted_comm_us_per_token=round(per_tok, 2),
                     health=health, trace=traces,
                     communicator=repr(self.comm))

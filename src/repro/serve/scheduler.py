@@ -1,0 +1,492 @@
+"""Async continuous-batching scheduler over :class:`~repro.serve.engine.Engine`.
+
+The production serving loop (ROADMAP "millions-of-users story"): a
+fixed budget of decode *slots*, FIFO admission, chunked prefill
+interleaved with decode so a long prompt never stalls the token
+stream, per-request token streaming, and slot recycling on EOS —
+driven either synchronously (:meth:`Scheduler.tick`, a deterministic
+virtual-clock step the tests and load generator use) or through
+:class:`AsyncServeEngine`'s async generators.
+
+How it composes with the plan layer: every tick runs ONE batched
+decode step built by :func:`~repro.distributed.step.make_sched_step`
+at the smallest slot *bucket* that covers the active slots
+(``slot_buckets`` ladder — the same ladder the engine's
+:class:`~repro.core.comm.BucketedPlan` families were compiled over),
+and in explicit mode every bucketed step function replays the
+engine's ONE init-compiled plan set. Varying occupancy therefore
+replays a handful of frozen plans and shows up in their per-bucket
+hit counters — the continuous-batching story `BucketedPlan` was built
+for, now actually driven by a scheduler.
+
+Determinism contract (pinned by ``tests/test_scheduler.py``): every
+per-row op in the decode step is row-independent — einsums contract
+within a row, softmax/rms_norm are per-row, the replayed collectives
+are elementwise across rows, and the MoE all_to_all uses lossless
+capacity so co-batched rows can never evict each other's tokens.
+Sampling keys derive from (request seed, tokens generated so far),
+never from batch position or wall clock. A request's token stream is
+therefore bit-identical no matter which other requests it shares
+steps with — the scheduler batches for throughput without changing a
+single emitted token vs. a sequential single-request run.
+
+Virtual time: the scheduler never reads a wall clock. ``tick(now)``
+takes the caller's clock (the load generator charges each tick
+``step_s * (1 + micro_steps)``), so traces replay exactly and TTFT /
+throughput metrics are reproducible to the bit.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import warnings
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import step as step_mod
+from repro.models import transformer as tf
+
+__all__ = ["Request", "Emission", "TickInfo", "Scheduler",
+           "AsyncServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival_s`` is in virtual seconds (the
+    load generator's clock); ``seed`` drives temperature sampling —
+    per-request, so the sample stream is schedule-independent."""
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32, non-empty
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    temperature: float = 0.0           # 0 -> greedy
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Emission:
+    """One streamed token: ``done`` marks the request's final token
+    (EOS or the max_new_tokens budget)."""
+    rid: int
+    token: int
+    done: bool
+    t: float                           # virtual emission time
+
+
+@dataclasses.dataclass(frozen=True)
+class TickInfo:
+    now: float
+    admitted: int
+    micro_steps: int                   # prefill-only steps this tick
+    bucket: int                        # slot bucket of the combined step
+    n_active: int                      # active slots after completions
+    queued: int
+    emissions: tuple                   # Emission, in slot order
+
+
+class _Slot:
+    __slots__ = ("req", "pos", "consumed", "last_token", "emitted",
+                 "t_admit", "t_first")
+
+    def __init__(self, req: Request, t_admit: float):
+        self.req = req
+        self.pos = 0          # tokens written into this slot's cache row
+        self.consumed = 0     # prompt tokens stepped so far
+        self.last_token = 0
+        self.emitted = 0
+        self.t_admit = t_admit
+        self.t_first: Optional[float] = None
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+class Scheduler:
+    """Continuous-batching loop over one engine replica.
+
+    Scheduling rules (docs/serving.md "continuous batching"):
+
+    * **Admission** — FIFO, a request enters a free slot once its
+      ``arrival_s`` has passed, never more than ``max_slots`` resident.
+      The queue is unbounded; nothing is ever dropped.
+    * **Chunked prefill** — each tick runs up to ``prefill_chunk - 1``
+      prefill-only *micro-steps* (advancing ONLY slots with more than
+      one prompt token left, via the step's active mask) followed by
+      one *combined* step in which prefilling slots consume their next
+      prompt token and decode slots consume their last sampled token.
+      A slot's final prompt token always runs in a combined step, so
+      its logits row immediately yields the first generated token.
+    * **Streaming** — decode slots emit exactly one token per tick;
+      a long co-resident prompt costs micro-steps (charged to the
+      virtual clock) but never withholds decode slots from a step.
+    * **Completion** — EOS (``ServeConfig.eos_id``) or the request's
+      ``max_new_tokens`` budget frees the slot; the last active slot
+      compacts into the freed row (one cache-row copy — an exact
+      permutation, so streams are unaffected) to keep active slots a
+      contiguous prefix and the step bucket minimal.
+
+    The batch must not be DP-sharded: one scheduler owns one replica;
+    scale-out across replicas is :class:`repro.serve.router.Router`.
+    """
+
+    def __init__(self, engine, *, max_slots: Optional[int] = None,
+                 prefill_chunk: int = 4):
+        self.eng = engine
+        scfg = engine.scfg
+        self.max_slots = int(max_slots or scfg.batch)
+        if not 1 <= self.max_slots <= scfg.batch:
+            raise ValueError(
+                f"max_slots={self.max_slots} must be in [1, engine batch "
+                f"{scfg.batch}] (the engine's plans were bucketed for that "
+                f"batch)")
+        _, sharded = step_mod.local_batch(engine.mesh, engine.ax, scfg.batch)
+        if sharded:
+            raise ValueError(
+                "Scheduler needs an unsharded batch (slots live on one "
+                "replica); build one replica per DP shard and fan out "
+                "with serve.router.Router")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.prefill_chunk = int(prefill_chunk)
+        self.eos_id = scfg.eos_id
+        #: scheduler follows the engine's (possibly already degraded) mode
+        self.mode = engine.mode
+        self._buckets = [b for b in step_mod.slot_buckets(self.max_slots)]
+        self._steps: Dict[tuple, Callable] = {}
+        self.cache = tf.init_cache(
+            engine.cfg, self.max_slots, scfg.max_kv,
+            dtype=jnp.int8 if scfg.kv_quant else None)
+        self._slots: List[_Slot] = []
+        self._queue: deque = deque()
+        self.streams: Dict[int, List[int]] = {}
+        self._done: Dict[int, dict] = {}
+        self._now = 0.0
+        self._ticks = 0
+        self._n_steps = 0
+        self._micro_total = 0
+        self._bucket_steps: Dict[int, int] = {b: 0 for b in self._buckets}
+
+    # -- clock (virtual; the caller owns it) -------------------------------
+    @property
+    def now(self) -> float:
+        return self._now
+
+    @property
+    def n_active(self) -> int:
+        return len(self._slots)
+
+    def advance(self, dt: float) -> None:
+        self._now += float(dt)
+
+    def advance_to(self, t: float) -> None:
+        self._now = max(self._now, float(t))
+
+    def next_arrival(self) -> Optional[float]:
+        return self._queue[0].arrival_s if self._queue else None
+
+    def outstanding(self) -> int:
+        return len(self._queue) + len(self._slots)
+
+    # -- submission --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens must be >=1")
+        if req.rid in self.streams or any(r.rid == req.rid
+                                          for r in self._queue):
+            raise ValueError(f"duplicate request id {req.rid}")
+        self._queue.append(dataclasses.replace(req, prompt=prompt))
+
+    # -- step machinery ----------------------------------------------------
+    def _bucket(self, k: int) -> int:
+        for b in self._buckets:
+            if b >= k:
+                return b
+        return self._buckets[-1]
+
+    def _step_fn(self, b: int):
+        key = (self.mode, b)
+        fn = self._steps.get(key)
+        if fn is None:
+            kw = (dict(comm=self.eng.comm,
+                       plans=self.eng.decode_plans or None)
+                  if self.mode == "explicit" else {})
+            fn, _ = step_mod.make_sched_step(
+                self.eng.cfg, self.eng.mesh, self.eng.ax, batch=b,
+                max_kv=self.eng.scfg.max_kv,
+                kv_quant=self.eng.scfg.kv_quant, mode=self.mode, **kw)
+            self._steps[key] = fn
+        return fn
+
+    def _slice(self, b: int):
+        if b == self.max_slots:
+            return self.cache
+        return jax.tree.map(lambda a: a[:, :b], self.cache)
+
+    def _merge(self, sub, b: int) -> None:
+        if b == self.max_slots:
+            self.cache = sub
+        else:
+            self.cache = jax.tree.map(
+                lambda a, s: a.at[:, :b].set(s), self.cache, sub)
+
+    def _run(self, b, tokens, pos, active):
+        """One guarded step at bucket ``b``. A failing explicit step
+        degrades the scheduler to auto (rebuilding its bucket steps)
+        and re-runs from the same pre-step state — the scheduler
+        analogue of the engine's fallback ladder; the engine's
+        ``fallbacks`` health counter records it so the router's
+        aggregate shows the degraded replica."""
+        args = (self.eng.params, self._slice(b), jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(active))
+        try:
+            return self._step_fn(b)(*args)
+        except Exception as e:
+            if self.mode == "auto":
+                raise
+            warnings.warn(
+                f"explicit scheduler step failed ({e}); falling back to "
+                f"auto (GSPMD) for the remainder of serving", stacklevel=2)
+            self.eng.health["fallbacks"] += 1
+            self.mode = "auto"
+            self._steps.clear()
+            return self._step_fn(b)(*args)
+
+    def _step_once(self, pred) -> tuple:
+        """Run one masked batched step over the active-slot prefix.
+        ``pred(slot)`` selects which slots advance; the rest (and the
+        bucket's free rows) are masked off, so their cache rows pass
+        through bit-exactly. Returns (logits rows, bucket)."""
+        k = len(self._slots)
+        b = self._bucket(k)
+        tokens = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        active = np.zeros(b, bool)
+        stepped = []
+        for i, s in enumerate(self._slots):
+            pos[i] = s.pos
+            tokens[i] = (s.req.prompt[s.consumed]
+                         if s.consumed < len(s.req.prompt)
+                         else s.last_token)
+            if pred(s):
+                active[i] = True
+                stepped.append(s)
+        logits, sub = self._run(b, tokens, pos, active)
+        self._merge(sub, b)
+        for s in stepped:
+            if s.consumed < len(s.req.prompt):
+                s.consumed += 1
+            s.pos += 1
+        self._n_steps += 1
+        self._bucket_steps[b] += 1
+        return logits, b
+
+    def _sample_row(self, slot: _Slot, row: np.ndarray) -> int:
+        t = slot.req.temperature
+        if t <= 0:
+            return int(np.argmax(row))
+        # key = f(request seed, tokens generated) — independent of slot
+        # index, co-residents, and tick count, so sampled streams are
+        # schedule-invariant like greedy ones
+        key = jax.random.fold_in(jax.random.key(slot.req.seed), slot.emitted)
+        return int(jax.random.categorical(key, jnp.asarray(row) / t))
+
+    # -- admission / release -----------------------------------------------
+    def _admit(self, now: float) -> int:
+        admitted = 0
+        while (self._queue and len(self._slots) < self.max_slots
+               and self._queue[0].arrival_s <= now):
+            req = self._queue.popleft()
+            i = len(self._slots)
+            # zero the recycled row: attention is masked by position, but
+            # the SSM/RWKV recurrent state must start from the init value
+            self.cache = jax.tree.map(lambda a: a.at[:, i].set(0),
+                                      self.cache)
+            self._slots.append(_Slot(req, now))
+            self.streams[req.rid] = []
+            admitted += 1
+        return admitted
+
+    def _finish(self, s: _Slot, now: float) -> None:
+        self._done[s.req.rid] = dict(
+            rid=s.req.rid, arrival=s.req.arrival_s, admit=s.t_admit,
+            first=s.t_first, finish=now, n_tokens=s.emitted,
+            prompt_len=int(len(s.req.prompt)))
+
+    def _release(self, i: int) -> None:
+        last = len(self._slots) - 1
+        if i != last:
+            # compact: move the last active slot into the freed row (an
+            # exact cache-row copy — a permutation of rows, so every
+            # remaining stream is bitwise unaffected)
+            self.cache = jax.tree.map(
+                lambda a: a.at[:, i].set(a[:, last]), self.cache)
+            self._slots[i] = self._slots[last]
+        self._slots.pop()
+
+    # -- the tick ----------------------------------------------------------
+    def tick(self, now: Optional[float] = None) -> TickInfo:
+        """Advance the world by one scheduling round at virtual time
+        ``now`` (default: the internal clock): admit, run the chunked-
+        prefill micro-steps, run the combined step, sample/stream, and
+        recycle completed slots."""
+        now = self._now if now is None else float(now)
+        if now < self._now:
+            raise ValueError(f"virtual clock moved backwards "
+                             f"({now} < {self._now})")
+        self._now = now
+        admitted = self._admit(now)
+        emissions: List[Emission] = []
+        micro = 0
+        bucket = 0
+        if self._slots:
+            def prefilling(s):
+                return s.consumed < len(s.req.prompt) - 1
+
+            while micro < self.prefill_chunk - 1 and \
+                    any(prefilling(s) for s in self._slots):
+                self._step_once(prefilling)
+                micro += 1
+            logits, bucket = self._step_once(lambda s: True)
+            rows = np.asarray(logits, np.float32)
+            done_idx = []
+            for i, s in enumerate(self._slots):
+                if s.consumed < len(s.req.prompt):
+                    continue        # prompt not done (chunk budget spent)
+                tok = self._sample_row(s, rows[i])
+                s.last_token = tok
+                s.emitted += 1
+                if s.t_first is None:
+                    s.t_first = now
+                self.streams[s.req.rid].append(tok)
+                fin = (tok == self.eos_id
+                       or s.emitted >= s.req.max_new_tokens)
+                emissions.append(Emission(s.req.rid, tok, fin, now))
+                if fin:
+                    self._finish(s, now)
+                    done_idx.append(i)
+            # release in descending index order so each compaction's
+            # "last slot" is still correct
+            for i in sorted(done_idx, reverse=True):
+                self._release(i)
+        self._ticks += 1
+        self._micro_total += micro
+        return TickInfo(now=now, admitted=admitted, micro_steps=micro,
+                        bucket=bucket, n_active=len(self._slots),
+                        queued=len(self._queue),
+                        emissions=tuple(emissions))
+
+    def run_until_drained(self, *, step_s: float = 1.0,
+                          max_ticks: int = 100_000) -> List[TickInfo]:
+        """Drive the internal virtual clock until every submitted
+        request completed: each tick costs ``step_s * (1 + micro_steps)``
+        virtual seconds; idle gaps fast-forward to the next arrival."""
+        infos = []
+        while self.outstanding():
+            if len(infos) >= max_ticks:
+                raise RuntimeError(
+                    f"scheduler did not drain in {max_ticks} ticks "
+                    f"({self.outstanding()} requests outstanding)")
+            nxt = self.next_arrival()
+            if not self._slots and nxt is not None and nxt > self._now:
+                self.advance_to(nxt)
+            info = self.tick()
+            infos.append(info)
+            self.advance(step_s * (1 + info.micro_steps))
+        return infos
+
+    # -- reporting ---------------------------------------------------------
+    def metrics(self) -> dict:
+        """Per-request serving metrics in virtual seconds. ``dropped``
+        is definitionally 0 (unbounded FIFO queue) and asserted by the
+        load harness; ``wait`` is admission delay (the starvation bound
+        the property test pins)."""
+        recs = [r for r in self._done.values()]
+        ttft = sorted(r["first"] - r["arrival"] for r in recs)
+        wait = sorted(r["admit"] - r["arrival"] for r in recs)
+        toks = sum(r["n_tokens"] for r in recs)
+        dur = max(self._now, 1e-9)
+        return dict(
+            completed=len(recs), dropped=0, outstanding=self.outstanding(),
+            tokens=toks, ticks=self._ticks, steps=self._n_steps,
+            micro_steps=self._micro_total,
+            tokens_per_vs=round(toks / dur, 3),
+            ttft_vs={"p50": _pct(ttft, 0.5), "p95": _pct(ttft, 0.95),
+                     "max": ttft[-1] if ttft else 0.0},
+            wait_vs={"p50": _pct(wait, 0.5), "p95": _pct(wait, 0.95),
+                     "max": wait[-1] if wait else 0.0},
+            bucket_steps=dict(self._bucket_steps))
+
+    def plan_report(self) -> dict:
+        """The engine's plan/health report plus the scheduler view:
+        ``mode`` is the mode the scheduler is actually stepping in (it
+        can degrade independently of the engine's caller-driven path)
+        and ``degraded`` flags divergence from the requested mode — the
+        per-replica bit the router aggregate surfaces."""
+        rep = self.eng.plan_report()
+        rep["mode"] = self.mode
+        rep["degraded"] = self.mode != self.eng.requested_mode
+        rep["scheduler"] = dict(
+            max_slots=self.max_slots, prefill_chunk=self.prefill_chunk,
+            ticks=self._ticks, steps=self._n_steps,
+            micro_steps=self._micro_total, active=len(self._slots),
+            queued=len(self._queue), bucket_steps=dict(self._bucket_steps))
+        return rep
+
+
+class AsyncServeEngine:
+    """Asyncio front-end: ``generate(request)`` is an async generator
+    yielding the request's tokens as the shared pump loop produces
+    them. One pump drives the scheduler (or a
+    :class:`~repro.serve.router.Router` — same duck-typed surface) for
+    ALL in-flight requests, yielding to the event loop between ticks so
+    arbitrarily many ``generate`` streams interleave over one batched
+    decode loop. The pump advances the same virtual clock the sync path
+    uses, so async streams are bit-identical to ``tick``-driven ones.
+    """
+
+    def __init__(self, sched, *, step_s: float = 1.0):
+        self._sched = sched
+        self._step_s = float(step_s)
+        self._queues: Dict[int, asyncio.Queue] = {}
+        self._pump_task: Optional[asyncio.Task] = None
+
+    async def generate(self, request: Request):
+        q: asyncio.Queue = asyncio.Queue()
+        self._queues[request.rid] = q
+        self._sched.submit(request)
+        if self._pump_task is None or self._pump_task.done():
+            self._pump_task = asyncio.get_running_loop().create_task(
+                self._pump())
+        try:
+            while True:
+                em = await q.get()
+                yield em.token
+                if em.done:
+                    return
+        finally:
+            self._queues.pop(request.rid, None)
+
+    async def _pump(self):
+        sched = self._sched
+        while sched.outstanding():
+            nxt = sched.next_arrival()
+            if sched.n_active == 0 and nxt is not None and nxt > sched.now:
+                sched.advance_to(nxt)
+            info = sched.tick()
+            for em in info.emissions:
+                q = self._queues.get(em.rid)
+                if q is not None:
+                    q.put_nowait(em)
+            sched.advance(self._step_s * (1 + info.micro_steps))
+            await asyncio.sleep(0)
