@@ -45,7 +45,7 @@ from repro.serve.scheduler import Request
 
 __all__ = ["TrafficConfig", "synth_trace", "run_load",
            "sequential_baseline", "run_serve_load", "serve_points",
-           "loadgen_smoke"]
+           "prefix_points", "loadgen_smoke"]
 
 
 @dataclasses.dataclass
@@ -53,7 +53,15 @@ class TrafficConfig:
     """Knobs of the synthetic trace. ``rate_rps`` is Poisson arrival
     intensity in requests per *virtual* second; ``zipf_a`` shapes the
     prompt-length distribution (heavy head of short prompts, rare long
-    ones — the shape that makes chunked prefill earn its keep)."""
+    ones — the shape that makes chunked prefill earn its keep).
+
+    Shared-prefix mode (``prefix_pool > 0``): every request's prompt is
+    a shared "system prompt" — drawn Zipf-skewed from a pool of
+    ``prefix_pool`` fixed token runs of length ``prefix_len`` — followed
+    by its own random suffix. This is the serving north star's traffic
+    shape (millions of requests over a handful of system prompts) and
+    what makes the prefix cache measurable: a skewed pool gives high
+    hit rates on the head prompt while the tail still exercises misses."""
     seed: int = 0
     n_requests: int = 20
     rate_rps: float = 4.0
@@ -62,14 +70,21 @@ class TrafficConfig:
     max_new: int = 8
     temperature: float = 0.0
     step_s: float = 0.05               # virtual cost of one decode step
+    prefix_pool: int = 0               # shared system prompts (0 = off)
+    prefix_len: int = 0                # tokens per shared prefix
+    prefix_zipf_a: float = 1.2         # pool-index skew
 
 
 def synth_trace(tcfg: TrafficConfig, vocab: int) -> List[Request]:
     """The seeded trace: exponential inter-arrival gaps (Poisson
     process at ``rate_rps``), Zipf prompt lengths clamped to
     ``max_prompt``, uniform ``1..max_new`` generation budgets, uniform
-    random token ids. Same ``tcfg`` + ``vocab`` → same trace, always."""
+    random token ids. With ``prefix_pool`` set, each prompt is
+    ``pool[zipf % pool_size] + suffix``. Same ``tcfg`` + ``vocab`` →
+    same trace, always."""
     rng = np.random.default_rng(tcfg.seed)
+    pool = [rng.integers(0, vocab, size=tcfg.prefix_len).astype(np.int32)
+            for _ in range(tcfg.prefix_pool)]
     t = 0.0
     reqs: List[Request] = []
     for i in range(tcfg.n_requests):
@@ -77,6 +92,10 @@ def synth_trace(tcfg: TrafficConfig, vocab: int) -> List[Request]:
         plen = int(min(rng.zipf(tcfg.zipf_a), tcfg.max_prompt))
         n_new = int(rng.integers(1, tcfg.max_new + 1))
         prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        if pool:
+            shared = pool[(int(rng.zipf(tcfg.prefix_zipf_a)) - 1)
+                          % len(pool)]
+            prompt = np.concatenate([shared, prompt]).astype(np.int32)
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=n_new,
                             arrival_s=round(t, 6),
                             temperature=tcfg.temperature, seed=i))
@@ -131,34 +150,49 @@ def _serve_model():
 def run_serve_load(tcfg: Optional[TrafficConfig] = None, *,
                    n_replicas: int = 2, tp: int = 2, batch: int = 4,
                    mode: str = "explicit", prefill_chunk: int = 4,
+                   fused_prefill: bool = False,
+                   prefill_seq_buckets=None,
+                   prefix_cache_tokens=None, queue_limit=None,
                    plan_dir=None) -> dict:
     """The full load test: build ``n_replicas`` × ``tp`` replicas from
     ONE exported plan-file set, drive the seeded trace through the
     router, then verify every stream bit-identical against the
     sequential single-request baseline (itself a replica loaded from
-    the same files). Returns the summary dict the smoke and the bench
-    points both render."""
+    the same files). The baseline is always COLD — no fused prefill, no
+    prefix cache — so enabling either knob is differentially tested
+    against the plain token-by-token path. Returns the summary dict the
+    smoke and the bench points both render."""
     tcfg = tcfg or TrafficConfig()
     cfg = _serve_model()
-    scfg = ServeConfig(batch=batch, max_kv=64, mode=mode)
+    scfg = ServeConfig(batch=batch, max_kv=64, mode=mode,
+                       prefill_seq_buckets=prefill_seq_buckets)
     plan_dir = plan_dir or tempfile.mkdtemp(prefix="repro_plan_set_")
     trace = synth_trace(tcfg, cfg.vocab)
 
     t0 = time.perf_counter()
     router = build_replicas(cfg, scfg, n_replicas=n_replicas, tp=tp,
                             plan_dir=plan_dir, mode=mode,
-                            prefill_chunk=prefill_chunk)
+                            prefill_chunk=prefill_chunk,
+                            fused_prefill=fused_prefill,
+                            prefix_cache_tokens=prefix_cache_tokens,
+                            queue_limit=queue_limit)
     build_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    ticks = len(run_load(router, trace, step_s=tcfg.step_s))
+    infos = run_load(router, trace, step_s=tcfg.step_s)
+    ticks = len(infos)
+    micro_steps = sum(i.micro_steps for i in infos)
     load_s = time.perf_counter() - t0
 
     m = router.metrics()
     rep = router.plan_report()
 
     # baseline replica: same checkpoint key, same exported plan files
-    base = build_replicas(cfg, scfg, n_replicas=1, tp=tp,
+    # (a plan set with extra prefill buckets loads fine into a config
+    # that doesn't use them), cold path — token-by-token prefill, no
+    # prefix cache
+    base_scfg = ServeConfig(batch=batch, max_kv=64, mode=mode)
+    base = build_replicas(cfg, base_scfg, n_replicas=1, tp=tp,
                           plan_dir=plan_dir, mode=mode,
                           prefill_chunk=prefill_chunk)
     base_streams = sequential_baseline(base.replicas[0], trace,
@@ -183,11 +217,19 @@ def run_serve_load(tcfg: Optional[TrafficConfig] = None, *,
         seed=tcfg.seed, requests=len(trace),
         completed=m["completed"], dropped=m["dropped"],
         bit_identical=not mismatched, mismatched=mismatched,
-        tokens=m["tokens"], ticks=ticks,
+        tokens=m["tokens"], ticks=ticks, micro_steps=micro_steps,
         tokens_per_vs=m["tokens_per_vs"],
         ttft_vs=m["ttft_vs"], wait_vs=m["wait_vs"],
         bucket_steps=m["bucket_steps"], plan_hits=plan_hits,
         health=rep["health"],
+        fused_prefill=fused_prefill,
+        rejected=m["rejected"],
+        prefix_hits=m["prefix_hits"], prefix_misses=m["prefix_misses"],
+        prefix_tokens_reused=m["prefix_tokens_reused"],
+        prefix_hit_rate=m["prefix_hit_rate"],
+        prefill_bucket_steps=[
+            r["scheduler"].get("prefill_bucket_steps", {})
+            for r in rep["replicas"]],
         seq_tokens_per_vs=base_m["tokens_per_vs"],
         batching_speedup=round(
             m["tokens_per_vs"] / max(base_m["tokens_per_vs"], 1e-9), 3),
@@ -228,8 +270,73 @@ def serve_points(points: list, tcfg: Optional[TrafficConfig] = None) -> dict:
     return s
 
 
+def _prefix_traffic(seed: int = 1) -> TrafficConfig:
+    """The shared-prefix trace the prefix-cache bench and smoke use:
+    mixed greedy + temperature sampling rides on per-request seeds (the
+    scheduler's sampling is seeded per request, so temperature > 0
+    stays deterministic)."""
+    return TrafficConfig(seed=seed, n_requests=16, prefix_pool=2,
+                         prefix_len=6, prefix_zipf_a=1.2,
+                         max_prompt=6, max_new=6, temperature=0.8)
+
+
+def prefix_points(points: list, tcfg: Optional[TrafficConfig] = None) -> dict:
+    """Append the prefix-cache bench points for ``run.py --json``:
+    ``serve_prefix_hit_rate`` (shared-prefix traffic, fused prefill +
+    prefix cache on, streams verified bit-identical to the cold
+    cache-disabled sequential baseline) and ``serve_prefill_speedup``
+    (total scheduler micro-steps cold / warm over the same trace —
+    prefill work the cache and the fused chunks eliminated). Raises on
+    any dropped request, stream divergence, or a zero hit rate — a
+    bench run whose cache never hits must not produce a
+    plausible-looking artifact."""
+    tcfg = tcfg or _prefix_traffic()
+    warm = run_serve_load(tcfg, fused_prefill=True,
+                          prefill_seq_buckets=(4, 8),
+                          prefix_cache_tokens=0)
+    if warm["dropped"] or warm["completed"] != warm["requests"]:
+        raise AssertionError(f"prefix serve load dropped requests: {warm}")
+    if not warm["bit_identical"]:
+        raise AssertionError(
+            f"prefix-cached streams diverged from the cold sequential "
+            f"baseline for rids {warm['mismatched']}")
+    if warm["prefix_hit_rate"] <= 0.0:
+        raise AssertionError(
+            f"shared-prefix traffic produced no prefix hits: {warm}")
+    cold = run_serve_load(tcfg)
+    if not cold["bit_identical"]:
+        raise AssertionError(
+            f"cold control run diverged for rids {cold['mismatched']}")
+    speedup = round(cold["micro_steps"] / max(warm["micro_steps"], 1), 3)
+    points.append(dict(
+        bench="serve_prefix_hit_rate", model=warm["model"],
+        replicas=warm["replicas"], tp=warm["tp"], batch=warm["batch"],
+        mode=warm["mode"], seed=tcfg.seed, requests=warm["requests"],
+        prefix_pool=tcfg.prefix_pool, prefix_len=tcfg.prefix_len,
+        bit_identical=warm["bit_identical"],
+        hit_rate=warm["prefix_hit_rate"], hits=warm["prefix_hits"],
+        misses=warm["prefix_misses"],
+        tokens_reused=warm["prefix_tokens_reused"],
+        prefill_bucket_steps=warm["prefill_bucket_steps"]))
+    points.append(dict(
+        bench="serve_prefill_speedup", model=warm["model"],
+        replicas=warm["replicas"], tp=warm["tp"], batch=warm["batch"],
+        mode=warm["mode"], seed=tcfg.seed,
+        cold_micro_steps=cold["micro_steps"],
+        warm_micro_steps=warm["micro_steps"],
+        speedup=speedup,
+        serve_prefix_hit_rate=warm["prefix_hit_rate"]))
+    return dict(warm=warm, cold_micro_steps=cold["micro_steps"],
+                prefill_speedup=speedup)
+
+
 def loadgen_smoke() -> dict:
-    """``run.py --serve`` entry: the default seeded load test, with the
-    same hard assertions as the bench points."""
+    """``run.py --serve`` entry: the default seeded load test plus the
+    shared-prefix differential run, with the same hard assertions as
+    the bench points."""
     s = serve_points([])
+    p = prefix_points([])
+    s["prefix"] = dict(hit_rate=p["warm"]["prefix_hit_rate"],
+                       bit_identical=p["warm"]["bit_identical"],
+                       prefill_speedup=p["prefill_speedup"])
     return s

@@ -40,8 +40,11 @@ TuningTable. Wired into ``scripts/check.sh --profile``.
 (``benchmarks/loadgen.py``): 2 engine replicas x tp=2, each loaded
 from the SAME exported plan-file set, behind the least-loaded router;
 ~20 Poisson/Zipf requests, zero drops, every token stream asserted
-bit-identical to a sequential single-request run. Wired into
-``scripts/check.sh --serve``.
+bit-identical to a sequential single-request run. Also runs the
+shared-prefix differential: fused bucketed prefill + prefix/KV-cache
+reuse over a Zipf-skewed system-prompt pool, streams asserted
+bit-identical to the cold cache-disabled baseline with a non-zero hit
+rate. Wired into ``scripts/check.sh --serve``.
 
 Every ``--json`` payload (and each point in it) is stamped with the
 git SHA and an ISO timestamp, and a copy is kept under
@@ -164,6 +167,12 @@ def main(argv=None) -> None:
               f"max={s['ttft_vs']['max']:.3f}, bucket_steps="
               f"{s['bucket_steps']}, plan_hits={s['plan_hits']} "
               f"— streams bit-identical to sequential baseline OK")
+        pre = s["prefix"]
+        print(f"serve_prefix: shared-prefix traffic hit_rate="
+              f"{pre['hit_rate']} prefill_speedup="
+              f"{pre['prefill_speedup']}x (fused chunks + prefix reuse "
+              f"vs cold) — streams bit-identical to cold cache-disabled "
+              f"baseline OK")
         return
     if "--profile" in argv:
         from benchmarks import profile
@@ -208,6 +217,9 @@ def main(argv=None) -> None:
         # hits, asserted bit-identical to the sequential baseline
         from benchmarks import loadgen
         serve = loadgen.serve_points(payload["points"])
+        # ...and the shared-prefix differential run: fused bucketed
+        # prefill + prefix/KV reuse vs the cold token-by-token baseline
+        prefix = loadgen.prefix_points(payload["points"])
         meta = _stamp_payload(payload)
         out = pathlib.Path(__file__).resolve().parent.parent \
             / "BENCH_collectives.json"
@@ -252,6 +264,10 @@ def main(argv=None) -> None:
               f"({serve['tokens_per_vs']} tok/vs, batching "
               f"{serve['batching_speedup']}x, ttft p95 "
               f"{serve['ttft_vs']['p95']:.3f}vs) — bit-identical OK")
+        print(f"prefix: hit_rate="
+              f"{prefix['warm']['prefix_hit_rate']} "
+              f"prefill_speedup={prefix['prefill_speedup']}x "
+              f"— warm streams bit-identical to cold baseline OK")
         return
 
     from benchmarks import collectives, cross_hw, llm_inference, roofline_table

@@ -1,0 +1,76 @@
+"""Shared-prefix serving example: fused bucketed prefill + prefix/KV
+cache reuse behind the plan-file router.
+
+The serving workload this PR targets: many requests sharing a handful
+of system prompts. Two replicas (tp=2 each) load ONE exported plan set
+whose `layer_allreduce` ladder carries the fused-prefill sequence
+buckets; each replica gets its own `PrefixCache` (a token-trie over KV
+slot snapshots), so a request whose prompt starts with an
+already-served prefix seeds its cache row from the trie and skips
+straight to the divergent suffix. The same trace then runs COLD — no
+fusion, no cache, token-by-token — and the script verifies every
+stream is bit-identical while printing the micro-step reduction and
+hit rate the warm path bought.
+
+    python examples/prefix_serve.py --requests 8
+    python examples/prefix_serve.py --requests 24 --prefix-len 8
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import pathlib
+import sys
+import tempfile
+
+# the load generator lives in benchmarks/ at the repo root (not under
+# src/), so running this file standalone needs the root on the path
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import loadgen
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prefix-pool", type=int, default=2,
+                    help="number of shared system prompts")
+    ap.add_argument("--prefix-len", type=int, default=6,
+                    help="tokens per shared prompt")
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+
+    tcfg = loadgen.TrafficConfig(
+        seed=args.seed, n_requests=args.requests,
+        prefix_pool=args.prefix_pool, prefix_len=args.prefix_len,
+        max_prompt=6, max_new=6, temperature=0.8)
+
+    plan_dir = tempfile.mkdtemp(prefix="prefix_serve_plans_")
+    warm = loadgen.run_serve_load(
+        tcfg, fused_prefill=True, prefill_seq_buckets=(4, 8),
+        prefix_cache_tokens=0, plan_dir=plan_dir)
+    cold = loadgen.run_serve_load(tcfg, plan_dir=plan_dir)
+
+    # both runs were diffed against a cold sequential baseline inside
+    # run_serve_load — the optimization must be invisible in the tokens
+    assert warm["bit_identical"], f"warm diverged: {warm['mismatched']}"
+    assert cold["bit_identical"], f"cold diverged: {cold['mismatched']}"
+    assert warm["prefix_hits"] > 0, "trace never shared a prefix"
+
+    print(f"requests: {warm['requests']}  replicas: {warm['replicas']} "
+          f"x tp={warm['tp']}  mode: {warm['mode']}")
+    print(f"prefix cache: hit_rate={warm['prefix_hit_rate']} "
+          f"({warm['prefix_hits']} hits / {warm['prefix_misses']} misses, "
+          f"{warm['prefix_tokens_reused']} prompt tokens skipped)")
+    print(f"fused prefill buckets (slot x seq -> micro-steps): "
+          f"{warm['prefill_bucket_steps']}")
+    speedup = cold["micro_steps"] / max(warm["micro_steps"], 1)
+    print(f"prefill micro-steps: cold={cold['micro_steps']} "
+          f"warm={warm['micro_steps']}  ({speedup:.2f}x fewer)")
+    print(f"streams bit-identical to the cold token-by-token baseline: "
+          f"{warm['bit_identical']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,7 +29,11 @@
 #                               # one exported plan-file set behind the
 #                               # router; ~20 virtual-clock requests,
 #                               # zero drops, streams bit-identical to
-#                               # a sequential single-request run
+#                               # a sequential single-request run; plus
+#                               # the shared-prefix differential (fused
+#                               # bucketed prefill + prefix/KV reuse,
+#                               # bit-identical to the cold baseline,
+#                               # hit rate > 0)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -38,7 +42,8 @@ run_docs() {
   echo "== doc smoke: docs pages present =="
   for f in README.md docs/architecture.md docs/plan-lifecycle.md \
            docs/dsl.md docs/serving.md docs/tuning.md \
-           docs/robustness.md docs/profiling.md docs/hierarchical.md; do
+           docs/robustness.md docs/profiling.md docs/hierarchical.md \
+           docs/prefix-cache.md; do
     [[ -s "$f" ]] || { echo "MISSING: $f" >&2; exit 1; }
   done
   echo "== doc smoke: executing examples/*.py =="
@@ -51,6 +56,7 @@ run_docs() {
     args=()
     case "$(basename "$ex")" in
       serve_llm.py) args=(--tokens 4) ;;
+      prefix_serve.py) args=(--requests 8) ;;
       # fresh ckpt dir per run: the example resumes from an existing
       # one and a resumed 2-step run has no steps left to smoke
       train_llm.py) args=(--steps 2 --tiny --ckpt-dir "$(mktemp -d)") ;;

@@ -31,8 +31,10 @@ from repro.models.config import ModelConfig
 from repro.train import optimizer as opt
 
 __all__ = ["make_train_step", "make_serve_step", "make_sched_step",
-           "init_sharded", "make_dp_communicators", "TPDecodeComms",
-           "compile_decode_plans", "local_batch", "slot_buckets"]
+           "make_prefill_sched_step", "init_sharded",
+           "make_dp_communicators", "TPDecodeComms",
+           "compile_decode_plans", "local_batch", "slot_buckets",
+           "seq_bucket_rows"]
 
 
 def _dp_axes(mesh: Mesh, ax: shd.MeshAxes) -> tuple[str, ...]:
@@ -225,8 +227,23 @@ def slot_buckets(batch_local: int) -> tuple[int, ...]:
     return tuple(out)
 
 
+def seq_bucket_rows(batch_local: int, buckets, seq_buckets) -> tuple:
+    """The merged row-bucket ladder a sequence-bucketed decode-plan
+    family is compiled over: the active-slot buckets plus, per prefill
+    sequence bucket ``s``, the ``batch_local * s`` rows a full-width
+    fused prefill step pushes through the per-layer AllReduce (smaller
+    slot × seq combinations pad up to the nearest bucket — the same
+    padding contract slot buckets already use)."""
+    rows = set(buckets)
+    for s in (seq_buckets or ()):
+        if s < 1:
+            raise ValueError(f"sequence buckets must be >= 1, got {s}")
+        rows.add(batch_local * int(s))
+    return tuple(sorted(rows))
+
+
 def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
-                         tp: int, buckets=None) -> dict:
+                         tp: int, buckets=None, seq_buckets=None) -> dict:
     """The decode-step collective plans, compiled once at init and
     replayed every generated token (paper §5.2):
 
@@ -246,11 +263,24 @@ def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
       :func:`~repro.distributed.moe_parallel.ep_capacity`). One plan
       family serves BOTH directions of every MoE layer — dispatch and
       combine move the same ``(e_total * capacity, d_model)`` buffer.
+
+    ``seq_buckets`` — the fused-prefill extension: prompt-chunk lengths
+    the serving layer will prefill in one step. Each adds a
+    ``batch_local * s`` row bucket to the ``layer_allreduce`` family
+    (and the matching capacity to ``moe_alltoall``), so a fused prefill
+    micro-step replays the SAME frozen families the one-token decode
+    replays, just at a bigger bucket — zero new plan kinds, and the
+    exported plan set carries the buckets automatically
+    (:class:`~repro.core.comm.BucketedPlan` serializes its ladder).
+    The ``logits_allgather`` family needs no sequence buckets: fused
+    prefill emits no logits (the final prompt token always runs through
+    the combined decode step).
     """
     buckets = tuple(buckets) if buckets else slot_buckets(batch_local)
+    rows = seq_bucket_rows(batch_local, buckets, seq_buckets)
     plans = {"layer_allreduce": comm.plan_for(
         "all_reduce", (batch_local, cfg.d_model), cfg.dtype,
-        buckets=buckets)}
+        buckets=rows)}
     if cfg.vocab % tp == 0:
         plans["logits_allgather"] = comm.plan_for(
             "all_gather", (batch_local, cfg.vocab // tp), "float32",
@@ -262,7 +292,7 @@ def compile_decode_plans(cfg: ModelConfig, comm, *, batch_local: int,
         e_local = e_total // tp
         caps = tuple(sorted({
             e_local * ep_capacity(b, cfg.moe.top_k, e_total)
-            for b in buckets}))
+            for b in rows}))
         plans["moe_alltoall"] = comm.plan_for(
             "all_to_all", (tp * caps[-1], cfg.d_model), cfg.dtype,
             buckets=caps)
@@ -605,6 +635,126 @@ def make_sched_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes, *,
         mapped,
         in_shardings=(None, csh_x, tsh, tsh, tsh),
         out_shardings=(NamedSharding(mesh, P(None, None)), csh_x),
+    ), cspecs_x
+
+
+def make_prefill_sched_step(cfg: ModelConfig, mesh: Mesh, ax: shd.MeshAxes,
+                            *, batch: int, seq: int, max_kv: int,
+                            kv_quant: bool = False, mode: str = "auto",
+                            comm=None, plans=None, manual_dp: bool = True):
+    """jit'd fused-prefill micro-step (the scheduler prefill hot path).
+
+    prefill_step(params, cache, tokens, pos, n_tok) -> cache
+
+    The chunked counterpart of :func:`make_sched_step`: ``tokens`` is
+    ``(batch, seq)`` — each row's next prompt chunk, left-aligned and
+    right-padded — ``pos`` is each row's write depth and ``n_tok`` its
+    valid-chunk length (0 = untouched slot; rows with ``n_tok=0`` pass
+    their cache through bit-exactly, subsuming ``make_sched_step``'s
+    ``active`` mask). No logits come back: fused prefill only fills the
+    cache, and the scheduler always runs a row's FINAL prompt token
+    through the combined decode step so first-token sampling (and the
+    vocab collective) stay on the decode path.
+
+    Exactness contract (see ``blocks.prefill_attention``): for windowed
+    layers a row's chunk must satisfy ``n_tok == 1`` or
+    ``pos + n_tok <= kv_len`` — the scheduler sizes chunks to respect
+    the ring (``serve.scheduler``). ``seq`` must not exceed the smallest
+    layer kv_len for the same reason.
+
+    ``mode='explicit'`` replays the SAME init-compiled plan families the
+    decode step replays — the per-layer AllReduce just hits the
+    ``batch * seq`` row bucket that :func:`compile_decode_plans` added
+    for this ``seq`` (``seq_buckets``) instead of the active-slot
+    bucket. Pass the engine's ``comm``/``plans`` so prefill and decode
+    share one plan set (one family of bucket-hit counters).
+    """
+    if cfg.family not in ("dense", "moe", "hybrid"):
+        raise ValueError(
+            f"fused prefill covers the dense, MoE, and hybrid families; "
+            f"{cfg.family!r} prefills token-by-token through the decode "
+            f"path")
+    b_local, batch_sharded = local_batch(mesh, ax, batch)
+    if batch_sharded:
+        raise ValueError(
+            "make_prefill_sched_step keeps the batch unsharded (slots "
+            "live on one replica); fan out replicas with serve.router "
+            "instead of DP-sharding the scheduler batch")
+    kv_lens = [min(w, max_kv) if w is not None else max_kv
+               for w in tf.layer_windows(cfg)]
+    if seq > min(kv_lens):
+        raise ValueError(
+            f"fused-prefill chunk length {seq} exceeds the smallest layer "
+            f"kv_len {min(kv_lens)}: a chunk wider than the KV ring can "
+            f"overwrite slots its own earlier queries still read — shrink "
+            f"the sequence bucket (or raise max_kv)")
+    pspecs = _pspecs(cfg, mesh, ax, False)
+    psh = shd.shardings_for(pspecs, mesh)
+    cspecs = shd.cache_pspecs(cfg, mesh, ax, batch=batch, kv_lens=kv_lens)
+    if kv_quant and "k" in cspecs:
+        cspecs = dict(cspecs,
+                      k_scale=list(cspecs["k"]), v_scale=list(cspecs["v"]))
+    tsh = NamedSharding(mesh, P(None))
+    tok2 = NamedSharding(mesh, P(None, None))
+
+    if mode == "auto":
+        csh = shd.shardings_for(cspecs, mesh)
+
+        def step(params, cache, tokens, pos, n_tok):
+            return tf.prefill_step(params, cfg, cache, tokens, pos, n_tok)
+
+        return jax.jit(
+            step,
+            in_shardings=(psh, csh, tok2, tsh, tsh),
+            out_shardings=csh,
+        ), cspecs
+
+    if mode != "explicit":
+        raise ValueError(mode)
+
+    ok, why = shd.explicit_decode_supported(cfg, mesh, ax)
+    if not ok:
+        raise ValueError(f"mode='explicit' unsupported here: {why}")
+    dp = _dp_axes(mesh, ax)
+    manual = {ax.model} | (set(dp) if manual_dp else set())
+    if set(mesh.axis_names) - manual:
+        from repro import compat
+        if not compat.HAS_PARTIAL_MANUAL_SHARD_MAP:
+            raise NotImplementedError(
+                "mode='explicit' with auto (GSPMD) mesh axes needs "
+                "partial-manual shard_map; keep manual_dp=True so the "
+                "step is fully manual (mirrors make_serve_step's guard)")
+
+    tp = int(mesh.shape[ax.model])
+    pspecs_x = shd.explicit_decode_pspecs(cfg, mesh, ax)
+    cspecs_x = shd.explicit_decode_cache_pspecs(
+        cfg, mesh, ax, batch=batch, kv_lens=kv_lens, kv_quant=kv_quant)
+    csh_x = shd.shardings_for(cspecs_x, mesh)
+    if comm is None:
+        comm = comm_lib.Communicator(ax.model, n=tp,
+                                     backend=comm_lib.default_backend())
+    if plans is None:
+        plans = compile_decode_plans(cfg, comm, batch_local=b_local, tp=tp,
+                                     seq_buckets=(seq,))
+    comms = TPDecodeComms(cfg, ax.model, tp,
+                          hidden_plan=plans["layer_allreduce"],
+                          logits_plan=plans.get("logits_allgather"),
+                          moe_plan=plans.get("moe_alltoall"))
+
+    def local_step(params, cache, tokens, pos, n_tok):
+        return tf.prefill_step(params, cfg, cache, tokens, pos, n_tok,
+                               comms=comms)
+
+    mapped = shard_map(
+        local_step, mesh=mesh,
+        in_specs=(pspecs_x, cspecs_x, P(None, None), P(None), P(None)),
+        out_specs=cspecs_x,
+        axis_names=manual, check_vma=False)
+
+    return jax.jit(
+        mapped,
+        in_shardings=(None, csh_x, tok2, tsh, tsh),
+        out_shardings=csh_x,
     ), cspecs_x
 
 

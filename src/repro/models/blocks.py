@@ -12,15 +12,17 @@ stack is on the critical path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "rms_norm", "rope", "apply_rope", "attention", "decode_attention",
-    "mlp_swiglu", "moe_layer", "init_linear", "init_attn", "init_mlp",
-    "init_moe", "padded_heads",
+    "prefill_attention", "mlp_swiglu", "moe_layer", "init_linear",
+    "init_attn", "init_mlp", "init_moe", "padded_heads",
 ]
 
 Params = dict
@@ -28,19 +30,67 @@ Params = dict
 
 # ---------------------------------------------------------------------------
 # norms / rope
+#
+# Cross-program bit-exactness: fused prefill runs the same math as
+# token-by-token decode but in a differently-shaped XLA program, and
+# the serving layer's differential tests require the two to agree BIT
+# FOR BIT. XLA CPU does not guarantee that: a `reduce` fused with a
+# strided producer picks a shape-dependent accumulation order, and
+# transcendental lowering (cos/sin) varies with the surrounding fusion.
+# (optimization_barrier does not help — the CPU pipeline drops it
+# before fusion.) So every order-sensitive reduction below is an
+# explicit pairwise tree (each stage adds disjoint element pairs, so
+# the dataflow graph pins the association), and RoPE angles come from
+# a host-precomputed table gathered by integer position.
 # ---------------------------------------------------------------------------
+def _tree_sum(x):
+    """Sum over the last axis with a fixed pairwise association.
+
+    Equivalent to ``jnp.sum(x, axis=-1)`` up to ordering, but the
+    reduction tree is spelled out op by op so the result cannot depend
+    on how XLA schedules a monolithic reduce (shape- and fusion-
+    dependent on CPU). Zero-padding to even length is exact for f32."""
+    n = x.shape[-1]
+    while n > 1:
+        if n % 2:
+            x = jnp.concatenate([x, jnp.zeros_like(x[..., :1])], axis=-1)
+            n += 1
+        x = x[..., 0::2] + x[..., 1::2]
+        n //= 2
+    return x[..., 0]
+
+
 def rms_norm(x, scale, eps: float = 1e-6):
-    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    xf = x.astype(jnp.float32)
+    var = _tree_sum(jnp.square(xf)) / x.shape[-1]
+    # 1/sqrt, not lax.rsqrt: sqrt and divide are exactly rounded (IEEE),
+    # while rsqrt lowers to a context-dependent approximation on CPU.
+    out = xf * (1.0 / jnp.sqrt(var + eps))[..., None]
     return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
 
 
+_ROPE_MAX_POS = 4096
+
+
+@functools.lru_cache(maxsize=None)
+def _rope_tables(head_dim: int, theta: float):
+    """(cos, sin) tables of shape (_ROPE_MAX_POS, head_dim/2), computed
+    ONCE on the host with numpy so every program gathers identical
+    bytes (device cos/sin codegen is fusion-context-dependent)."""
+    freqs = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                             / np.float32(head_dim)))
+    angles = np.arange(_ROPE_MAX_POS, dtype=np.float32)[:, None] * freqs
+    return np.cos(angles), np.sin(angles)
+
+
 def rope(positions, head_dim: int, theta: float):
-    """positions: (...,) int -> cos/sin tables (..., head_dim/2)."""
-    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
-                             / head_dim))
-    angles = positions.astype(jnp.float32)[..., None] * freqs
-    return jnp.cos(angles), jnp.sin(angles)
+    """positions: (...,) int -> cos/sin tables (..., head_dim/2).
+
+    Positions wrap modulo ``_ROPE_MAX_POS`` (= 4096); serving positions
+    are bounded by the KV budget well below that."""
+    cos_t, sin_t = _rope_tables(head_dim, float(theta))
+    idx = positions % _ROPE_MAX_POS
+    return jnp.asarray(cos_t)[idx], jnp.asarray(sin_t)[idx]
 
 
 def apply_rope(x, cos, sin):
@@ -54,6 +104,33 @@ def apply_rope(x, cos, sin):
         sin = sin.reshape(shape)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
+
+
+def _qkv_proj(p: Params, x, cfg):
+    """QKV projection to (b, n_heads, s, hd) for the decode/prefill
+    cache paths. qk-norm runs in the projection's natural (b, s, n, h)
+    layout BEFORE the head transpose: the norm's reduction must read
+    ``h`` contiguously, or XLA CPU fuses the transpose into the reduce
+    and picks a shape-dependent accumulation order (see module note —
+    this is load-bearing for fused-prefill bit-exactness)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def _softmax(logits):
+    """Softmax whose normalizing sum uses the fixed-order pairwise tree
+    (see module note): masked attention logits underflow to exact zeros
+    after ``exp``, and the tree keeps the sum identical between the
+    decode- and prefill-shaped programs."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / _tree_sum(e)[..., None]
 
 
 # ---------------------------------------------------------------------------
@@ -110,7 +187,7 @@ def attention(p: Params, x, cfg, *, window: Optional[int], positions=None,
         logits *= hd ** -0.5
         mask = _attn_mask(s, s, causal=cfg.causal, window=window)
         logits = jnp.where(mask, logits, _NEG)
-        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        probs = _softmax(logits).astype(x.dtype)
         out = jnp.einsum("bngst,bnth->bngsh", probs, v)
     out = out.reshape(b, nh, s, hd)
     if nh > cfg.n_heads:
@@ -205,12 +282,7 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
     max_kv = cache_k.shape[2]
     quant = cache_k.dtype == jnp.int8
 
-    q = jnp.einsum("bsd,dnh->bnsh", x, p["wq"])
-    k_new = jnp.einsum("bsd,dnh->bnsh", x, p["wk"])
-    v_new = jnp.einsum("bsd,dnh->bnsh", x, p["wv"])
-    if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
-        k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+    q, k_new, v_new = _qkv_proj(p, x, cfg)
     vec = jnp.ndim(pos) > 0                 # per-slot positions (batch,)
     cos, sin = rope(pos if vec else pos[None], hd, cfg.rope_theta)
     if vec:
@@ -281,14 +353,14 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
              else valid[None, None, None, None, :])
     logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
     if quant:
-        probs = jax.nn.softmax(logits, axis=-1)
+        probs = _softmax(logits)
         # scale folds into probs (per key position) before the value dot
         pscaled = probs * v_scale[:, :, None, :, 0][:, :, :, None, :].astype(jnp.float32)
         out = jnp.einsum("bngst,bnth->bngsh", pscaled.astype(jnp.bfloat16),
                          cache_v.astype(jnp.bfloat16),
                          preferred_element_type=jnp.float32).astype(x.dtype)
     else:
-        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        probs = _softmax(logits).astype(x.dtype)
         out = jnp.einsum("bngst,bnth->bngsh", probs, cache_v)
     out = out.reshape(b, nh, 1, hd)
     if nh > cfg.n_heads:
@@ -342,13 +414,169 @@ def _decode_attn_tp_shard(p: Params, q, cache_k, cache_v, pos, cfg,
              else valid[None, None, None, :])
     logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
     if quant:
-        probs = jax.nn.softmax(logits, axis=-1)
+        probs = _softmax(logits)
         pscaled = probs * vs_sel[..., 0][:, :, None, :].astype(jnp.float32)
         out = jnp.einsum("bnst,bnth->bnsh", pscaled.astype(jnp.bfloat16),
                          v_sel.astype(jnp.bfloat16),
                          preferred_element_type=jnp.float32).astype(q.dtype)
     else:
-        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        probs = _softmax(logits).astype(q.dtype)
+        out = jnp.einsum("bnst,bnth->bnsh", probs, v_sel)
+    nh, _ = padded_heads(cfg)
+    if nh > cfg.n_heads:
+        head_mask = (hid < cfg.n_heads).astype(out.dtype)
+        out = out * head_mask[None, :, None, None]
+    return jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
+
+
+def prefill_attention(p: Params, x, cache_k, cache_v, pos, n_tok, cfg,
+                      *, window: Optional[int], k_scale=None, v_scale=None,
+                      head_offset=None):
+    """Fused multi-token prefill with KV cache — the chunked analogue of
+    :func:`decode_attention`, bit-identical to running it token by token.
+
+    x: (batch, S, d_model) — one prompt chunk per row; pos: (batch,)
+    position of each row's FIRST chunk token; n_tok: (batch,) how many
+    of the S positions are real for that row (the rest are padding:
+    their cache writes are masked off and their outputs are garbage the
+    caller discards, exactly like the scheduler's inactive-slot
+    contract). Returns (out (b, S, d_model), new_k, new_v[, new_k_scale,
+    new_v_scale]).
+
+    Exactness: each chunk token's K/V is projected, rotated, and (for
+    int8 caches) quantized by the SAME per-token math as the decode
+    write, then *selected* (never summed) into its cache slot; the read
+    masks each query row ``j`` down to positions ``<= pos+j``, and fully
+    masked logits underflow to exact zeros in the softmax — so every
+    (query, key) product matches the token-by-token path bit for bit.
+
+    Caller contract for windowed (ring-buffer) layers: a chunk must not
+    wrap the ring past keys its own queries still read, i.e. per row
+    either ``n_tok == 1`` (the decode write — safe at any depth) or
+    ``pos + n_tok <= kv_len``. The scheduler enforces this when sizing
+    fused chunks. ``head_offset`` is the explicit-TP path, as in
+    :func:`decode_attention`.
+    """
+    b, S, _ = x.shape
+    hd = cfg.hd
+    nh, nkv = padded_heads(cfg)
+    kv_len = cache_k.shape[2]
+    quant = cache_k.dtype == jnp.int8
+
+    q, k_new, v_new = _qkv_proj(p, x, cfg)
+    pmat = pos[:, None] + jnp.arange(S)[None, :]            # (b, S)
+    cos, sin = rope(pmat, hd, cfg.rope_theta)               # (b, S, hd/2)
+    cos, sin = cos[:, None], sin[:, None]                   # (b, 1, S, hd/2)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+
+    slot = pmat % kv_len if window is not None else pmat
+    valid_j = jnp.arange(S)[None, :] < n_tok[:, None]       # (b, S)
+    # M[i, j, t]: chunk token j of row i lands on cache slot t. At most
+    # one j per (i, t) — chunk slots are distinct (S <= kv_len).
+    M = ((slot[:, :, None] == jnp.arange(kv_len)[None, None, :])
+         & valid_j[:, :, None])
+    hit = M.any(axis=1)                                     # (b, kv_len)
+    j_of = jnp.argmax(M, axis=1)                            # (b, kv_len)
+
+    def _write(cache, scales, val):
+        def sel(a):
+            idx = jnp.broadcast_to(
+                j_of[:, None, :, None],
+                (b, a.shape[1], kv_len, a.shape[-1]))
+            return jnp.take_along_axis(a, idx, axis=2)
+        m = hit[:, None, :, None]
+        if not quant:
+            return jnp.where(m, sel(val), cache), scales
+        sc = (jnp.max(jnp.abs(val.astype(jnp.float32)),
+                      axis=-1, keepdims=True) / 127.0 + 1e-8)
+        qv = jnp.clip(jnp.round(val.astype(jnp.float32) / sc),
+                      -127, 127).astype(jnp.int8)
+        return (jnp.where(m, sel(qv), cache),
+                jnp.where(m, sel(sc.astype(scales.dtype)), scales))
+
+    cache_k, k_scale = _write(cache_k, k_scale, k_new)
+    cache_v, v_scale = _write(cache_v, v_scale, v_new)
+
+    k_pos = jnp.arange(kv_len)
+    if window is not None:
+        age = (slot[:, :, None] - k_pos[None, None, :]) % kv_len
+        lim = jnp.minimum(pmat + 1, kv_len)
+        valid = age < lim[:, :, None]                       # (b, S, kv_len)
+    else:
+        valid = k_pos[None, None, :] <= pmat[:, :, None]
+
+    g = nh // nkv
+    if head_offset is not None:
+        out = _prefill_attn_tp_shard(p, q, cache_k, cache_v, valid, cfg,
+                                     head_offset=head_offset, g=g,
+                                     k_scale=k_scale, v_scale=v_scale)
+        if quant:
+            return out, cache_k, cache_v, k_scale, v_scale
+        return out, cache_k, cache_v
+    q = q.reshape(b, nkv, g, S, hd)
+    if quant:
+        logits = jnp.einsum("bngsh,bnth->bngst", q.astype(jnp.bfloat16),
+                            cache_k.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        logits = logits * k_scale[:, :, None, :, 0][:, :, :, None, :].astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bngsh,bnth->bngst", q, cache_k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    vmask = valid[:, None, None, :, :]
+    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
+    if quant:
+        probs = _softmax(logits)
+        pscaled = probs * v_scale[:, :, None, :, 0][:, :, :, None, :].astype(jnp.float32)
+        out = jnp.einsum("bngst,bnth->bngsh", pscaled.astype(jnp.bfloat16),
+                         cache_v.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        probs = _softmax(logits).astype(x.dtype)
+        out = jnp.einsum("bngst,bnth->bngsh", probs, cache_v)
+    out = out.reshape(b, nh, S, hd)
+    if nh > cfg.n_heads:
+        head_mask = (jnp.arange(nh) < cfg.n_heads).astype(out.dtype)
+        out = out * head_mask[None, :, None, None]
+    ret = jnp.einsum("bnsh,nhd->bsd", out, p["wo"])
+    if quant:
+        return ret, cache_k, cache_v, k_scale, v_scale
+    return ret, cache_k, cache_v
+
+
+def _prefill_attn_tp_shard(p: Params, q, cache_k, cache_v, valid, cfg, *,
+                           head_offset, g, k_scale=None, v_scale=None):
+    """Per-shard chunked attention for the explicit-TP prefill path —
+    :func:`_decode_attn_tp_shard` generalized to S query positions.
+    ``valid`` is the precomputed (b, S, kv_len) per-(row, query)
+    validity mask; everything else matches the decode variant op for
+    op, so each query position's math is bit-identical to its
+    one-token decode step."""
+    b, nh_l, S, hd = q.shape
+    quant = cache_k.dtype == jnp.int8
+    hid = head_offset + jnp.arange(nh_l)            # global head ids
+    k_sel = jnp.take(cache_k, hid // g, axis=1)     # (b, nh_l, kv_len, hd)
+    v_sel = jnp.take(cache_v, hid // g, axis=1)
+    if quant:
+        ks_sel = jnp.take(k_scale, hid // g, axis=1)
+        vs_sel = jnp.take(v_scale, hid // g, axis=1)
+        logits = jnp.einsum("bnsh,bnth->bnst", q.astype(jnp.bfloat16),
+                            k_sel.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        logits = logits * ks_sel[..., 0][:, :, None, :].astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bnsh,bnth->bnst", q, k_sel).astype(jnp.float32)
+    logits *= hd ** -0.5
+    logits = jnp.where(valid[:, None, :, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    if quant:
+        probs = _softmax(logits)
+        pscaled = probs * vs_sel[..., 0][:, :, None, :].astype(jnp.float32)
+        out = jnp.einsum("bnst,bnth->bnsh", pscaled.astype(jnp.bfloat16),
+                         v_sel.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32).astype(q.dtype)
+    else:
+        probs = _softmax(logits).astype(q.dtype)
         out = jnp.einsum("bnst,bnth->bnsh", probs, v_sel)
     nh, _ = padded_heads(cfg)
     if nh > cfg.n_heads:

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.models.blocks import init_linear
 
-__all__ = ["init_ssm_head", "ssm_forward", "ssm_decode_step", "init_ssm_state"]
+__all__ = ["init_ssm_head", "ssm_forward", "ssm_decode_step",
+           "ssm_prefill_scan", "init_ssm_state"]
 
 
 def init_ssm_head(key, cfg, d_inner: int):
@@ -103,3 +104,29 @@ def ssm_decode_step(p, x, state, cfg, *, d_offset=None):
     y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
     out = (y.astype(x.dtype) @ p["w_out"])[:, None]
     return out, h
+
+
+def ssm_prefill_scan(p, x, state, cfg, n_tok, *, d_offset=None):
+    """Fused-prefill SSM: run the O(1) decode update over a whole chunk.
+
+    x: (b, S, d_model); state: (b, d_inner, st); n_tok: (b,) int32 —
+    per-row count of valid chunk positions. Returns (out (b, S,
+    d_model), new_state) where ``out[:, j]`` is EXACTLY what
+    :func:`ssm_decode_step` would have produced at that position and
+    the state only advances through positions ``j < n_tok[i]`` (rows
+    with ``n_tok=0`` pass their state through bit-exactly — the
+    scheduler's inactive-slot contract). Bit-identity with the
+    token-by-token path holds by construction: each scan step IS the
+    decode step on the sliced position, with a per-row ``where`` on the
+    state advance."""
+    S = x.shape[1]
+
+    def step(carry, j):
+        h = carry
+        out, h_new = ssm_decode_step(p, jax.lax.dynamic_slice_in_dim(
+            x, j, 1, axis=1), h, cfg, d_offset=d_offset)
+        ok = (j < n_tok)[:, None, None]
+        return jnp.where(ok, h_new, h), out[:, 0]
+
+    final, outs = jax.lax.scan(step, state, jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 1), final

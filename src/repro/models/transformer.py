@@ -29,7 +29,7 @@ from repro.models.blocks import rms_norm
 from repro.models.config import ModelConfig
 
 __all__ = ["init_params", "forward", "logits_fn", "loss_fn", "init_cache",
-           "decode_step", "layer_windows"]
+           "decode_step", "prefill_step", "layer_windows"]
 
 
 # ---------------------------------------------------------------------------
@@ -337,3 +337,110 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, comms=None):
     if comms is not None:
         return comms.logits(params, h), new_cache
     return logits_fn(params, cfg, h)[:, 0], new_cache
+
+
+def prefill_step(params, cfg: ModelConfig, cache, tokens, pos, n_tok, *,
+                 comms=None):
+    """Fused multi-token prefill: advance every row's KV cache by a
+    whole prompt chunk in ONE step, bit-identically to feeding the same
+    tokens through :func:`decode_step` one at a time.
+
+    tokens: (b, S) int32 — each row's next prompt chunk (rows pad with
+    arbitrary tokens past their count); pos: (b,) int32 position of
+    each row's first chunk token; n_tok: (b,) int32 how many of the S
+    tokens are real per row (0 = the row doesn't advance: its cache —
+    including the hybrid SSM state — passes through bit-exactly, the
+    scheduler's inactive-slot contract, so no outer mask-select is
+    needed). Returns the new cache only: prefill produces no logits —
+    the scheduler always runs a row's FINAL prompt token through the
+    combined decode step, whose logits row seeds the first sampled
+    token, so the fused path never needs the vocab collective.
+
+    ``comms`` is the explicit-TP hook (:class:`~repro.distributed.step.
+    TPDecodeComms`), exactly as in :func:`decode_step`: per-layer
+    partials complete through the replayed AllReduce plan (now at
+    (b*S, d_model) sequence-bucketed rows), MoE dispatch/combine
+    through the capacity-bucketed all_to_all. rwkv6/encoder families
+    have no fused prefill (the scheduler keeps them token-by-token).
+
+    Windowed-layer contract (see :func:`blocks.prefill_attention`): per
+    row, either ``n_tok == 1`` or ``pos + n_tok <= kv_len`` for every
+    ring-buffer layer. The scheduler sizes chunks to satisfy it.
+    """
+    if cfg.family not in ("dense", "moe", "hybrid") or (
+            comms is not None and cfg.family == "moe"
+            and comms.moe_plan is None):
+        raise NotImplementedError(
+            "fused prefill covers the dense, MoE, and hybrid families "
+            "(explicit mode additionally needs a compiled moe_alltoall "
+            "plan for MoE); rwkv6/encoder configs prefill token-by-token "
+            "through the decode path")
+    b, S = tokens.shape
+    if comms is not None:
+        x = comms.embed(params["embed"], tokens.reshape(-1)).reshape(
+            b, S, -1)
+    else:
+        x = params["embed"][tokens]                     # (b, S, d)
+    wins = layer_windows(cfg)
+    quant = "k_scale" in cache
+
+    def body(x, scanned):
+        gp_list, ck, cv, sst, ksc, vsc = scanned
+        new_k, new_v, new_s, new_ksc, new_vsc = [], [], [], [], []
+        for i, win in enumerate(wins):
+            lp = gp_list[i]
+            h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            ho = (comms.head_offset(lp["attn"]["wq"].shape[-2])
+                  if comms is not None else None)
+            if quant:
+                att, k_upd, v_upd, ks_upd, vs_upd = blocks.prefill_attention(
+                    lp["attn"], h, ck[i], cv[i], pos, n_tok, cfg,
+                    window=win, k_scale=ksc[i], v_scale=vsc[i],
+                    head_offset=ho)
+                new_ksc.append(ks_upd)
+                new_vsc.append(vs_upd)
+            else:
+                att, k_upd, v_upd = blocks.prefill_attention(
+                    lp["attn"], h, ck[i], cv[i], pos, n_tok, cfg,
+                    window=win, head_offset=ho)
+            if cfg.family == "hybrid":
+                d_off = (comms.ssm_offset(lp["ssm"]["a_log"].shape[0])
+                         if comms is not None else None)
+                s_out, s_new = ssm.ssm_prefill_scan(
+                    lp["ssm"], h, sst[i], cfg, n_tok, d_offset=d_off)
+                if comms is not None:
+                    s_out = comms.hidden(s_out)
+                new_s.append(s_new)
+            if comms is not None:
+                att = comms.hidden(att)     # complete the out-proj partial
+            if cfg.family == "hybrid":
+                att = (att + s_out) * 0.5
+            x = x + att
+            h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            if cfg.family == "moe":
+                if comms is not None:
+                    x = x + comms.moe(lp["moe"], h)
+                else:
+                    x = x + blocks.moe_layer(lp["moe"], h, cfg)
+            else:
+                mlp_out = blocks.mlp_swiglu(lp["mlp"], h)
+                if comms is not None:
+                    mlp_out = comms.hidden(mlp_out)  # down-proj partial
+                x = x + mlp_out
+            new_k.append(k_upd)
+            new_v.append(v_upd)
+        return x, (new_k, new_v, new_s, new_ksc, new_vsc)
+
+    sst = cache.get("ssm", [jnp.zeros((n_groups(cfg), 1)) for _ in wins])
+    dummy = [jnp.zeros((n_groups(cfg), 1)) for _ in wins]
+    ksc = cache.get("k_scale", dummy)
+    vsc = cache.get("v_scale", dummy)
+    _, (nk, nv, ns, nksc, nvsc) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], sst, ksc, vsc))
+    new_cache = dict(cache, k=nk, v=nv)
+    if "ssm" in cache:
+        new_cache["ssm"] = ns
+    if quant:
+        new_cache["k_scale"] = nksc
+        new_cache["v_scale"] = nvsc
+    return new_cache

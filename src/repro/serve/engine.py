@@ -65,12 +65,16 @@ __all__ = ["ServeConfig", "Engine"]
 
 
 def _check_plan_set(cfg: ModelConfig, plans: dict, *, tp: int,
-                    batch_local: int) -> None:
+                    batch_local: int, seq_buckets=None) -> None:
     """Validate a loaded decode-plan set against this engine's
     config/mesh. The §4.4 deployment failure mode is shipping plan
     files compiled for a different model, axis size, or batch — that
     must degrade visibly (auto fallback + health counter) rather than
-    replay wrong programs. Raises ValueError with the mismatch."""
+    replay wrong programs. ``seq_buckets``: the fused-prefill sequence
+    buckets this engine is configured for — each needs its
+    ``batch_local * s`` row bucket in the ``layer_allreduce`` ladder,
+    else the fused prefill micro-step would overflow the shipped plan
+    family at trace time. Raises ValueError with the mismatch."""
     if tp <= 1:
         raise ValueError("decode plans need a TP axis of size > 1")
     ar = plans.get("layer_allreduce")
@@ -97,6 +101,17 @@ def _check_plan_set(cfg: ModelConfig, plans: dict, *, tp: int,
         raise ValueError(
             f"layer_allreduce top bucket {top} < local batch "
             f"{batch_local}: re-export the set with the serving batch")
+    for s in (seq_buckets or ()):
+        need = batch_local * int(s)
+        ladder = (ar.buckets if isinstance(ar, comm_lib.BucketedPlan)
+                  else (ar.shape[0],))
+        if need not in ladder:
+            raise ValueError(
+                f"layer_allreduce ladder {tuple(ladder)} is missing the "
+                f"{need}-row bucket for prefill sequence bucket {s} "
+                f"(batch_local={batch_local}): re-export the plan set "
+                f"with prefill seq buckets "
+                f"(compile_decode_plans(..., seq_buckets={tuple(seq_buckets)}))")
     if cfg.vocab % tp == 0 and "logits_allgather" not in plans:
         raise ValueError("plan set missing 'logits_allgather' for the "
                          "vocab-sharded logits path")
@@ -114,6 +129,9 @@ class ServeConfig:
     temperature: float = 0.0       # 0 -> greedy
     mode: str = "auto"             # 'auto' (GSPMD) | 'explicit' (plan replay)
     kv_quant: bool = False         # int8 KV cache with per-token scales
+    # fused-prefill sequence buckets (prompt-chunk lengths the scheduler
+    # prefills in one micro-step); None = token-by-token prefill plans only
+    prefill_seq_buckets: Optional[tuple] = None
     # -- robustness knobs (docs/robustness.md) -----------------------------
     verify: str = "strict"         # plan verification: 'off'|'warn'|'strict'
     max_retries: int = 2           # bounded retry on transient step failure
@@ -173,7 +191,8 @@ class Engine:
         if decode_plans is not None:
             try:
                 _check_plan_set(cfg, decode_plans, tp=tp,
-                                batch_local=b_local)
+                                batch_local=b_local,
+                                seq_buckets=serve_cfg.prefill_seq_buckets)
                 self.decode_plans = dict(decode_plans)
             except Exception as e:   # mismatched/incomplete shipped set
                 plan_err = e
@@ -183,7 +202,8 @@ class Engine:
         elif tp > 1:
             try:
                 self.decode_plans = compile_decode_plans(
-                    cfg, self.comm, batch_local=b_local, tp=tp)
+                    cfg, self.comm, batch_local=b_local, tp=tp,
+                    seq_buckets=serve_cfg.prefill_seq_buckets)
             except Exception as e:   # verification / compile failure
                 plan_err = e
                 warnings.warn(

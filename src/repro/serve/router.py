@@ -140,6 +140,8 @@ class Router:
         for m in per:
             for b, c in m["bucket_steps"].items():
                 bucket_steps[b] = bucket_steps.get(b, 0) + c
+        hits = sum(m.get("prefix_hits", 0) for m in per)
+        misses = sum(m.get("prefix_misses", 0) for m in per)
         return dict(
             replicas=len(self.replicas),
             completed=sum(m["completed"] for m in per), dropped=0,
@@ -149,7 +151,14 @@ class Router:
                      "max": ttft[-1] if ttft else 0.0},
             wait_vs={"p50": _pct(wait, 0.5), "p95": _pct(wait, 0.95),
                      "max": wait[-1] if wait else 0.0},
-            bucket_steps=bucket_steps, per_replica=per)
+            bucket_steps=bucket_steps,
+            rejected=sum(m.get("rejected", 0) for m in per),
+            prefix_hits=hits, prefix_misses=misses,
+            prefix_tokens_reused=sum(m.get("prefix_tokens_reused", 0)
+                                     for m in per),
+            prefix_hit_rate=(round(hits / (hits + misses), 4)
+                             if hits + misses else 0.0),
+            per_replica=per)
 
     def plan_report(self) -> dict:
         """Fleet plan/health view: per-replica reports, summed health
@@ -174,7 +183,8 @@ class Router:
 def build_replicas(cfg, serve_cfg, *, n_replicas: int, tp: int,
                    plan_dir, params_key: int = 0, mode: Optional[str] = None,
                    max_slots: Optional[int] = None, prefill_chunk: int = 4,
-                   devices=None) -> Router:
+                   fused_prefill: bool = False, queue_limit=None,
+                   prefix_cache_tokens=None, devices=None) -> Router:
     """Build a router over ``n_replicas`` engine replicas, each on its
     own disjoint ``(1, tp)`` device slice, ALL initialized from the
     same exported plan-file set — the full §4.4 round trip:
@@ -188,7 +198,15 @@ def build_replicas(cfg, serve_cfg, *, n_replicas: int, tp: int,
     (same values on its own devices — a stand-in for loading one
     checkpoint per host), so any replica serves any request with
     bit-identical tokens: the router's routing choice can never change
-    an output stream."""
+    an output stream.
+
+    ``fused_prefill``/``queue_limit`` forward to each
+    :class:`Scheduler`; when ``serve_cfg.prefill_seq_buckets`` is set
+    the exported plan set carries the prefill sequence buckets, so
+    replicas replay fused-prefill collectives from the same frozen
+    files as decode. ``prefix_cache_tokens`` builds one
+    :class:`~repro.serve.prefix_cache.PrefixCache` PER replica (``0`` =
+    unbounded, ``None`` = disabled)."""
     import jax
     from jax.sharding import Mesh
 
@@ -210,7 +228,8 @@ def build_replicas(cfg, serve_cfg, *, n_replicas: int, tp: int,
         ax.model, n=tp, backend=comm_lib.default_backend(),
         verify=serve_cfg.verify)
     plans = step_mod.compile_decode_plans(
-        cfg, planner, batch_local=serve_cfg.batch, tp=tp)
+        cfg, planner, batch_local=serve_cfg.batch, tp=tp,
+        seq_buckets=serve_cfg.prefill_seq_buckets)
     comm_lib.export_plan_set(plans, plan_dir)
 
     schedulers = []
@@ -225,6 +244,17 @@ def build_replicas(cfg, serve_cfg, *, n_replicas: int, tp: int,
         loaded = comm_lib.load_plan_set(plan_dir, verify=serve_cfg.verify)
         eng = Engine(cfg, params, mesh, serve_cfg, ax=ax, mode=mode,
                      decode_plans=loaded)
+        # per-replica prefix cache: replicas never share KV bytes (their
+        # caches live on disjoint device slices), so each gets its own
+        # trie — cross-replica reuse would alias device state.
+        pc = None
+        if prefix_cache_tokens is not None:
+            from repro.serve.prefix_cache import PrefixCache
+            # 0 = enabled with unbounded capacity; None = disabled
+            pc = PrefixCache(capacity_tokens=prefix_cache_tokens or None)
         schedulers.append(Scheduler(eng, max_slots=max_slots,
-                                    prefill_chunk=prefill_chunk))
+                                    prefill_chunk=prefill_chunk,
+                                    fused_prefill=fused_prefill,
+                                    queue_limit=queue_limit,
+                                    prefix_cache=pc))
     return Router(schedulers)

@@ -53,6 +53,10 @@ from repro.models import transformer as tf
 __all__ = ["Request", "Emission", "TickInfo", "Scheduler",
            "AsyncServeEngine"]
 
+#: cache-leaf kinds the prefix cache snapshots (pure-attention tape;
+#: recurrent state is excluded — see Scheduler._seed_prefix)
+_PC_KINDS = ("k", "v", "k_scale", "v_scale")
+
 
 @dataclasses.dataclass
 class Request:
@@ -90,7 +94,7 @@ class TickInfo:
 
 class _Slot:
     __slots__ = ("req", "pos", "consumed", "last_token", "emitted",
-                 "t_admit", "t_first")
+                 "t_admit", "t_first", "pc_handle")
 
     def __init__(self, req: Request, t_admit: float):
         self.req = req
@@ -100,6 +104,7 @@ class _Slot:
         self.emitted = 0
         self.t_admit = t_admit
         self.t_first: Optional[float] = None
+        self.pc_handle = None   # prefix-cache lease held while resident
 
 
 def _pct(sorted_vals: List[float], q: float) -> float:
@@ -116,7 +121,25 @@ class Scheduler:
 
     * **Admission** — FIFO, a request enters a free slot once its
       ``arrival_s`` has passed, never more than ``max_slots`` resident.
-      The queue is unbounded; nothing is ever dropped.
+      The queue is unbounded by default (nothing is ever dropped);
+      ``queue_limit`` opts into bounded admission with backpressure —
+      :meth:`submit` returns False and the ``rejected`` counter in
+      :meth:`metrics` ticks instead of queueing without bound.
+    * **Fused prefill** (``fused_prefill=True``) — each prefill
+      micro-step pushes a whole prompt *chunk* per slot through
+      :func:`~repro.distributed.step.make_prefill_sched_step` (up to
+      the largest sequence bucket, ring-capped per row so windowed
+      layers stay exact) instead of one token, replaying the engine's
+      sequence-bucketed plan families. Token-by-token remains the
+      default and the fallback for unsupported families.
+    * **Prefix reuse** (``prefix_cache=``a :class:`~repro.serve
+      .prefix_cache.PrefixCache`) — admission seeds a fresh slot with
+      the longest cached prompt prefix (dense/MoE attention caches
+      only; recurrent state is not per-token sliceable) and the first
+      sampled token triggers an insert of the completed prompt's slot
+      snapshot, so later requests sharing the prefix skip those
+      prefill tokens entirely. Misses and evictions fall back to the
+      ordinary cold prefill — streams stay bit-identical either way.
     * **Chunked prefill** — each tick runs up to ``prefill_chunk - 1``
       prefill-only *micro-steps* (advancing ONLY slots with more than
       one prompt token left, via the step's active mask) followed by
@@ -138,7 +161,8 @@ class Scheduler:
     """
 
     def __init__(self, engine, *, max_slots: Optional[int] = None,
-                 prefill_chunk: int = 4):
+                 prefill_chunk: int = 4, fused_prefill: bool = False,
+                 queue_limit: Optional[int] = None, prefix_cache=None):
         self.eng = engine
         scfg = engine.scfg
         self.max_slots = int(max_slots or scfg.batch)
@@ -173,6 +197,41 @@ class Scheduler:
         self._n_steps = 0
         self._micro_total = 0
         self._bucket_steps: Dict[int, int] = {b: 0 for b in self._buckets}
+        # -- bounded admission (opt-in backpressure) -----------------------
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1 or None")
+        self.queue_limit = queue_limit
+        self._rejected = 0
+        # -- fused prefill (sequence-bucketed chunk micro-steps) -----------
+        kv_lens = [min(w, scfg.max_kv) if w is not None else scfg.max_kv
+                   for w in tf.layer_windows(engine.cfg)]
+        self._min_kv = min(kv_lens)
+        self.fused_prefill = (bool(fused_prefill)
+                              and engine.cfg.family in ("dense", "moe",
+                                                        "hybrid"))
+        ladder = (scfg.prefill_seq_buckets
+                  or step_mod.slot_buckets(self.prefill_chunk))
+        self._seq_buckets = tuple(sorted(
+            {int(s) for s in ladder if 1 <= int(s) <= self._min_kv}))
+        if self.fused_prefill and not self._seq_buckets:
+            raise ValueError(
+                f"no usable prefill sequence bucket <= the smallest layer "
+                f"kv_len {self._min_kv} (configured {tuple(ladder)})")
+        #: explicit fused prefill replays the engine's plan set only when
+        #: the engine actually compiled the sequence buckets into it
+        #: (ServeConfig.prefill_seq_buckets); otherwise each (bucket, seq)
+        #: step compiles its own family on the engine's communicator
+        self._shared_prefill_plans = scfg.prefill_seq_buckets is not None
+        self._prefill_steps: Dict[tuple, Callable] = {}
+        self._prefill_bucket_steps: Dict[tuple, int] = {}
+        # -- prefix/KV reuse ------------------------------------------------
+        #: recurrent state (SSM/RWKV) is a running reduction, not a
+        #: per-token tape — only pure-attention caches are prefix-sliceable
+        self.prefix_cache = (
+            prefix_cache if isinstance(self.cache, dict)
+            and "k" in self.cache and "ssm" not in self.cache else None)
+        self._prefix = {"hits": 0, "misses": 0, "tokens_reused": 0,
+                        "inserts": 0}
 
     # -- clock (virtual; the caller owns it) -------------------------------
     @property
@@ -196,7 +255,11 @@ class Scheduler:
         return len(self._queue) + len(self._slots)
 
     # -- submission --------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue a request. Returns True when accepted; with
+        ``queue_limit`` set, a full queue rejects (returns False and
+        counts in ``metrics()['rejected']``) instead of growing without
+        bound — the opt-in backpressure signal."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
@@ -205,7 +268,12 @@ class Scheduler:
         if req.rid in self.streams or any(r.rid == req.rid
                                           for r in self._queue):
             raise ValueError(f"duplicate request id {req.rid}")
+        if (self.queue_limit is not None
+                and len(self._queue) >= self.queue_limit):
+            self._rejected += 1
+            return False
         self._queue.append(dataclasses.replace(req, prompt=prompt))
+        return True
 
     # -- step machinery ----------------------------------------------------
     def _bucket(self, k: int) -> int:
@@ -291,6 +359,81 @@ class Scheduler:
         self._bucket_steps[b] += 1
         return logits, b
 
+    # -- fused prefill (sequence-bucketed chunk micro-steps) ----------------
+    def _prefill_fn(self, b: int, s: int):
+        key = (self.mode, b, s)
+        fn = self._prefill_steps.get(key)
+        if fn is None:
+            kw = {}
+            if self.mode == "explicit":
+                kw["comm"] = self.eng.comm
+                if self._shared_prefill_plans:
+                    kw["plans"] = self.eng.decode_plans or None
+            fn, _ = step_mod.make_prefill_sched_step(
+                self.eng.cfg, self.eng.mesh, self.eng.ax, batch=b, seq=s,
+                max_kv=self.eng.scfg.max_kv,
+                kv_quant=self.eng.scfg.kv_quant, mode=self.mode, **kw)
+            self._prefill_steps[key] = fn
+        return fn
+
+    def _chunk_len(self, s: _Slot) -> int:
+        """How many prompt tokens slot ``s`` may fuse into this
+        micro-step: the tokens it has left before its FINAL prompt
+        token (which always runs in the combined step), capped at the
+        largest sequence bucket and at the ring headroom
+        ``min_kv - pos`` so a windowed layer never overwrites a slot
+        its own in-chunk queries still read (``blocks
+        .prefill_attention``'s exactness contract; a 1-token chunk is
+        the always-exact fallback once the ring is full)."""
+        remaining = len(s.req.prompt) - 1 - s.consumed
+        if remaining <= 0:
+            return 0
+        n = min(remaining, self._seq_buckets[-1], self._min_kv - s.pos)
+        return max(n, 1)
+
+    def _prefill_once(self) -> None:
+        """One fused prefill micro-step: every prefilling slot advances
+        by its chunk (others, and the bucket's free rows, pass their
+        cache through bit-exactly via ``n_tok=0``). No logits — cache
+        only."""
+        k = len(self._slots)
+        b = self._bucket(k)
+        chunks = [self._chunk_len(s) for s in self._slots]
+        S = next(sb for sb in self._seq_buckets if sb >= max(chunks))
+        tokens = np.zeros((b, S), np.int32)
+        pos = np.zeros(b, np.int32)
+        n_tok = np.zeros(b, np.int32)
+        for i, (s, n) in enumerate(zip(self._slots, chunks)):
+            pos[i] = s.pos
+            if n > 0:
+                tokens[i, :n] = s.req.prompt[s.consumed:s.consumed + n]
+                n_tok[i] = n
+        args = (self.eng.params, self._slice(b), jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(n_tok))
+        try:
+            sub = self._prefill_fn(b, S)(*args)
+        except Exception as e:
+            if self.mode == "auto":
+                raise
+            warnings.warn(
+                f"explicit fused-prefill step failed ({e}); falling back "
+                f"to auto (GSPMD) for the remainder of serving",
+                stacklevel=2)
+            self.eng.health["fallbacks"] += 1
+            self.mode = "auto"
+            self._steps.clear()
+            self._prefill_steps.clear()
+            sub = self._prefill_fn(b, S)(*args)
+        self._merge(sub, b)
+        for s, n in zip(self._slots, chunks):
+            if n > 0:
+                s.consumed += n
+                s.pos += n
+        self._n_steps += 1
+        key = (b, S)
+        self._prefill_bucket_steps[key] = \
+            self._prefill_bucket_steps.get(key, 0) + 1
+
     def _sample_row(self, slot: _Slot, row: np.ndarray) -> int:
         t = slot.req.temperature
         if t <= 0:
@@ -302,6 +445,59 @@ class Scheduler:
         return int(jax.random.categorical(key, jnp.asarray(row) / t))
 
     # -- admission / release -----------------------------------------------
+    def _seed_prefix(self, slot: _Slot, i: int) -> None:
+        """Seed a freshly-admitted slot's cache row with the longest
+        cached prompt prefix. The lease stays pinned until the slot is
+        released; reuse is capped at ``prompt_len - 1`` (the final
+        prompt token always runs through the combined step so the first
+        sampled token comes off live logits) and at the smallest layer
+        kv_len (reused slots are written at ring positions 0..L-1)."""
+        prompt = slot.req.prompt
+        plen = len(prompt)
+        if self.prefix_cache is None or plen < 2:
+            return
+        cap = min(plen - 1, self._min_kv)
+        L, segs, handle = self.prefix_cache.acquire(prompt[:cap])
+        if L == 0:
+            self._prefix["misses"] += 1
+            return
+        self._prefix["hits"] += 1
+        self._prefix["tokens_reused"] += L
+        slot.pc_handle = handle
+        upd = {}
+        for kind in _PC_KINDS:
+            if kind in self.cache:
+                upd[kind] = [
+                    leaf.at[:, i, :, :L].set(
+                        jnp.asarray(segs[f"{kind}{j}"], leaf.dtype))
+                    for j, leaf in enumerate(self.cache[kind])]
+        self.cache = dict(self.cache, **upd)
+        slot.pos = slot.consumed = L
+
+    def _snapshot_prefix(self, slot: _Slot, i: int) -> None:
+        """Index the just-completed prompt: at the first sampled token
+        the slot's cache row holds exactly the prompt's KV bytes
+        (positions 0..plen-1), so a copy of that row seeds every later
+        request sharing the prefix. Skipped when the ring wrapped
+        (prompt longer than the smallest kv_len — the tape is no longer
+        a pure prefix) or when the trie already holds the full prompt."""
+        prompt = slot.req.prompt
+        plen = len(prompt)
+        if (self.prefix_cache is None or plen < 2 or plen > self._min_kv
+                or self.prefix_cache.match(prompt) >= plen):
+            return
+        segs = {}
+        for kind in _PC_KINDS:
+            if kind in self.cache:
+                for j, leaf in enumerate(self.cache[kind]):
+                    segs[f"{kind}{j}"] = np.ascontiguousarray(
+                        np.asarray(leaf)[:, i, :, :plen])
+        handle = self.prefix_cache.insert(prompt, segs)
+        self._prefix["inserts"] += 1
+        # swap the admission lease for the insert lease (deeper pin)
+        self.prefix_cache.release(slot.pc_handle)
+        slot.pc_handle = handle
+
     def _admit(self, now: float) -> int:
         admitted = 0
         while (self._queue and len(self._slots) < self.max_slots
@@ -312,8 +508,10 @@ class Scheduler:
             # the SSM/RWKV recurrent state must start from the init value
             self.cache = jax.tree.map(lambda a: a.at[:, i].set(0),
                                       self.cache)
-            self._slots.append(_Slot(req, now))
+            slot = _Slot(req, now)
+            self._slots.append(slot)
             self.streams[req.rid] = []
+            self._seed_prefix(slot, i)
             admitted += 1
         return admitted
 
@@ -324,6 +522,9 @@ class Scheduler:
             prompt_len=int(len(s.req.prompt)))
 
     def _release(self, i: int) -> None:
+        if self.prefix_cache is not None:
+            self.prefix_cache.release(self._slots[i].pc_handle)
+            self._slots[i].pc_handle = None
         last = len(self._slots) - 1
         if i != last:
             # compact: move the last active slot into the freed row (an
@@ -355,7 +556,10 @@ class Scheduler:
 
             while micro < self.prefill_chunk - 1 and \
                     any(prefilling(s) for s in self._slots):
-                self._step_once(prefilling)
+                if self.fused_prefill:
+                    self._prefill_once()
+                else:
+                    self._step_once(prefilling)
                 micro += 1
             logits, bucket = self._step_once(lambda s: True)
             rows = np.asarray(logits, np.float32)
@@ -368,6 +572,9 @@ class Scheduler:
                 s.emitted += 1
                 if s.t_first is None:
                     s.t_first = now
+                    # first sampled token: the cache row holds exactly
+                    # the prompt tape — index it for prefix reuse
+                    self._snapshot_prefix(s, i)
                 self.streams[s.req.rid].append(tok)
                 fin = (tok == self.eos_id
                        or s.emitted >= s.req.max_new_tokens)
@@ -416,8 +623,11 @@ class Scheduler:
         wait = sorted(r["admit"] - r["arrival"] for r in recs)
         toks = sum(r["n_tokens"] for r in recs)
         dur = max(self._now, 1e-9)
+        px = self._prefix
+        px_total = px["hits"] + px["misses"]
         return dict(
             completed=len(recs), dropped=0, outstanding=self.outstanding(),
+            rejected=self._rejected,
             tokens=toks, ticks=self._ticks, steps=self._n_steps,
             micro_steps=self._micro_total,
             tokens_per_vs=round(toks / dur, 3),
@@ -425,7 +635,12 @@ class Scheduler:
                      "max": ttft[-1] if ttft else 0.0},
             wait_vs={"p50": _pct(wait, 0.5), "p95": _pct(wait, 0.95),
                      "max": wait[-1] if wait else 0.0},
-            bucket_steps=dict(self._bucket_steps))
+            bucket_steps=dict(self._bucket_steps),
+            prefix_hits=px["hits"], prefix_misses=px["misses"],
+            prefix_tokens_reused=px["tokens_reused"],
+            prefix_inserts=px["inserts"],
+            prefix_hit_rate=round(px["hits"] / px_total, 4)
+            if px_total else 0.0)
 
     def plan_report(self) -> dict:
         """The engine's plan/health report plus the scheduler view:
@@ -440,7 +655,18 @@ class Scheduler:
             max_slots=self.max_slots, prefill_chunk=self.prefill_chunk,
             ticks=self._ticks, steps=self._n_steps,
             micro_steps=self._micro_total, active=len(self._slots),
-            queued=len(self._queue), bucket_steps=dict(self._bucket_steps))
+            queued=len(self._queue), bucket_steps=dict(self._bucket_steps),
+            fused_prefill=self.fused_prefill,
+            seq_buckets=list(self._seq_buckets),
+            # (slot bucket, seq bucket) -> fused micro-steps; stringified
+            # so the report stays JSON-serializable
+            prefill_bucket_steps={
+                f"{b}x{s}": n
+                for (b, s), n in sorted(self._prefill_bucket_steps.items())},
+            rejected=self._rejected,
+            prefix=dict(self._prefix,
+                        **(self.prefix_cache.stats()
+                           if self.prefix_cache is not None else {})))
         return rep
 
 

@@ -1,0 +1,310 @@
+"""Differential shared-prefix serving harness (PR headline) + prefix
+trie property tests.
+
+The tentpole claim under test: turning ON fused bucketed prefill AND
+prefix/KV-cache reuse changes *nothing* about what the fleet emits —
+every stream from mixed shared-prefix traffic (two shared "system
+prompts", divergent suffixes, interleaved greedy + temperature
+sampling, routed across 2 plan-file replicas) is bit-identical to a
+cold, cache-disabled sequential run, while the prefill micro-step
+count drops and the hit counters prove actual reuse happened.
+
+Below the serving layer, `PrefixCache` itself is property-tested over
+random seeded workloads (`tests/_hypothesis_shim.py` stands in when
+hypothesis is absent): refcounts never go negative, eviction never
+frees a live (pinned) slot, the matched length is always the true
+longest common prefix against everything inserted, and token
+accounting is conserved under insert/acquire/release/eviction churn —
+`PrefixCache.check()` asserts the structural half after every op.
+
+Also here: the plan-set regression for the fused-prefill ladder — an
+engine configured for sequence buckets must reject (with an actionable
+error) a shipped plan set that was exported without them.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from benchmarks import loadgen  # noqa: E402
+from repro.core import api  # noqa: E402
+from repro.core import comm as comm_lib  # noqa: E402
+from repro.distributed import step as step_mod  # noqa: E402
+from repro.serve.engine import _check_plan_set  # noqa: E402
+from repro.serve.prefix_cache import PrefixCache  # noqa: E402
+
+TP = 2
+BATCH = 4
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the differential shared-prefix load test
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def warm(tmp_path_factory):
+    """Shared-prefix traffic through 2 replicas with the works ON:
+    fused bucketed prefill, exported seq-bucket plan families, a
+    per-replica prefix cache. `run_serve_load` itself replays the SAME
+    trace on a cold cache-disabled sequential replica and diffs every
+    stream — `bit_identical` is the tentpole bit."""
+    tcfg = loadgen.TrafficConfig(
+        seed=7, n_requests=10, prefix_pool=2, prefix_len=5,
+        prefix_zipf_a=1.2, max_prompt=5, max_new=5, temperature=0.8)
+    return loadgen.run_serve_load(
+        tcfg, fused_prefill=True, prefill_seq_buckets=(4, 8),
+        prefix_cache_tokens=0,
+        plan_dir=tmp_path_factory.mktemp("prefix_plans"))
+
+
+def test_warm_streams_bit_identical_to_cold_sequential(warm):
+    """Every stream — greedy and temperature-sampled alike — matches
+    the cold baseline token for token. Prefix reuse and fused prefill
+    are pure scheduling optimizations or they are bugs."""
+    assert warm["bit_identical"], \
+        f"streams diverged from cold baseline: rids {warm['mismatched']}"
+    assert warm["completed"] == warm["requests"]
+    assert warm["dropped"] == 0 and warm["rejected"] == 0
+    assert warm["degraded"] == []          # fused explicit never fell back
+
+
+def test_warm_run_actually_reused_prefixes(warm):
+    """Bit-identity alone could be vacuous (a cache that never hits is
+    trivially exact) — the counters must prove reuse happened."""
+    assert warm["prefix_hits"] > 0
+    assert warm["prefix_hit_rate"] > 0
+    # every hit seeds at least one token, so reuse >= hits
+    assert warm["prefix_tokens_reused"] >= warm["prefix_hits"]
+
+
+def test_warm_run_fused_prefill_ran_bucketed(warm):
+    """The fused micro-steps dispatched through the (slot, seq) bucket
+    grid — at least one replica ran at least one fused chunk, and every
+    observed seq bucket is from the configured ladder."""
+    seen = [k for per in warm["prefill_bucket_steps"] for k in per]
+    assert seen, "no fused prefill micro-steps recorded"
+    for key in seen:
+        b, s = key.split("x")
+        assert int(b) in step_mod.slot_buckets(BATCH)
+        assert int(s) in (4, 8)
+
+
+def test_warm_beats_cold_on_prefill_micro_steps(warm):
+    """The measured acceptance criterion: the warm run spends strictly
+    fewer scheduler micro-steps than the cold token-by-token run of the
+    SAME trace (chunking collapses prompt tokens; cache hits skip
+    them entirely)."""
+    tcfg = loadgen.TrafficConfig(
+        seed=7, n_requests=10, prefix_pool=2, prefix_len=5,
+        prefix_zipf_a=1.2, max_prompt=5, max_new=5, temperature=0.8)
+    cold = loadgen.run_serve_load(tcfg)
+    assert cold["bit_identical"]
+    assert warm["micro_steps"] < cold["micro_steps"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: plan-set regression for the fused-prefill ladder
+# ---------------------------------------------------------------------------
+def test_plan_set_missing_seq_bucket_rejected(tmp_path):
+    """A plan set exported WITHOUT sequence buckets must be rejected by
+    an engine configured to fuse-prefill with them — with an error that
+    says exactly how to re-export — instead of overflowing the shipped
+    ladder at trace time."""
+    cfg = loadgen._serve_model()
+    planner = comm_lib.Communicator(
+        "model", n=TP, backend=comm_lib.default_backend())
+    plans = step_mod.compile_decode_plans(cfg, planner,
+                                          batch_local=BATCH, tp=TP)
+    comm_lib.export_plan_set(plans, tmp_path)
+    loaded = api.load_plan_set(tmp_path)
+    # fine for a decode-only engine...
+    _check_plan_set(cfg, loaded, tp=TP, batch_local=BATCH)
+    # ...rejected, actionably, when seq buckets are configured
+    with pytest.raises(ValueError, match=r"prefill sequence bucket"):
+        _check_plan_set(cfg, loaded, tp=TP, batch_local=BATCH,
+                        seq_buckets=(8,))
+    with pytest.raises(ValueError, match=r"re-export"):
+        _check_plan_set(cfg, loaded, tp=TP, batch_local=BATCH,
+                        seq_buckets=(8,))
+    # a seq-bucketed export passes the same check
+    plans2 = step_mod.compile_decode_plans(
+        cfg, planner, batch_local=BATCH, tp=TP, seq_buckets=(8,))
+    _check_plan_set(cfg, plans2, tp=TP, batch_local=BATCH, seq_buckets=(8,))
+
+
+def test_engine_degrades_loudly_on_missing_seq_bucket(tmp_path):
+    """The full load-path regression: `api.load_plan_set` round-trips a
+    seq-bucket-free artifact fine, but an engine CONFIGURED for fused
+    prefill buckets must reject it with the loud warning and degrade to
+    auto — never replay a ladder the fused micro-step would overflow."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.distributed import sharding as shd
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = loadgen._serve_model()
+    planner = comm_lib.Communicator(
+        "model", n=TP, backend=comm_lib.default_backend())
+    plans = step_mod.compile_decode_plans(cfg, planner,
+                                          batch_local=BATCH, tp=TP)
+    comm_lib.export_plan_set(plans, tmp_path)
+    loaded = api.load_plan_set(tmp_path)
+
+    mesh = Mesh(np.asarray(jax.devices()[:TP]).reshape(1, TP),
+                ("data", "model"))
+    params, _ = step_mod.init_sharded(cfg, mesh, shd.MeshAxes(),
+                                      jax.random.key(0))
+    scfg = ServeConfig(batch=BATCH, max_kv=64, mode="explicit",
+                       prefill_seq_buckets=(8,))
+    with pytest.warns(UserWarning, match="rejected"):
+        eng = Engine(cfg, params, mesh, scfg, mode="explicit",
+                     decode_plans=loaded)
+    assert eng.decode_plans == {}       # the bad artifact is not served
+    assert eng.requested_mode == "explicit" and eng.mode == "auto"
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache unit behavior (deterministic)
+# ---------------------------------------------------------------------------
+def _segs(tokens):
+    """Snapshot stand-in whose bytes encode the tokens: position i on
+    the token axis carries token id i — so any slice handed back by
+    acquire() can be checked for exactness, across node splits and
+    multi-node concatenation."""
+    t = np.asarray(tokens, np.float32)
+    return {"k0": np.ascontiguousarray(
+        np.broadcast_to(t[None, None, :, None], (1, 2, len(t), 3)))}
+
+
+def _lcp(a, b):
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+def test_trie_acquire_returns_exact_prefix_bytes():
+    pc = PrefixCache()
+    pc.insert([1, 2, 3, 4], _segs([1, 2, 3, 4]))
+    pc.insert([1, 2, 7, 8], _segs([1, 2, 7, 8]))     # splits after [1,2]
+    pc.check()
+    assert pc.counters["splits"] == 1
+    for q, want in ([1, 2, 3, 4, 9], [1, 2, 3, 4]), \
+                   ([1, 2, 7], [1, 2, 7]), ([1, 2, 9], [1, 2]), \
+                   ([5, 1], []):
+        L, segs, h = pc.acquire(q)
+        assert L == len(want) == pc.match(q)
+        if want:
+            np.testing.assert_array_equal(segs["k0"][0, 0, :, 0],
+                                          np.asarray(want, np.float32))
+            # COW: mutating the lease cannot corrupt the trie
+            segs["k0"][:] = -1.0
+            L2, segs2, h2 = pc.acquire(q)
+            assert L2 == L
+            np.testing.assert_array_equal(segs2["k0"][0, 0, :, 0],
+                                          np.asarray(want, np.float32))
+            pc.release(h2)
+        else:
+            assert segs is None and h is None
+        pc.release(h)
+        pc.release(h)          # double release is a guarded no-op
+        pc.check()
+
+
+def test_trie_eviction_respects_pins_and_lru():
+    pc = PrefixCache(capacity_tokens=6)
+    h1 = pc.insert([1, 2, 3], _segs([1, 2, 3]))
+    h2 = pc.insert([4, 5, 6], _segs([4, 5, 6]))
+    pc.check()
+    # at capacity; a third insert must evict — but both leaves are
+    # pinned, so the cache legally runs over until a release
+    h3 = pc.insert([7, 8, 9], _segs([7, 8, 9]))
+    pc.check()
+    assert pc.stats()["tokens"] == 9 > pc.capacity_tokens
+    assert pc.counters["evictions"] == 0
+    # releasing the LRU pin lets eviction reclaim exactly that branch
+    pc.release(h1)
+    pc.check()
+    assert pc.counters["evictions"] == 1
+    assert pc.match([1, 2, 3]) == 0            # evicted
+    assert pc.match([4, 5, 6]) == 3            # pinned survivors intact
+    assert pc.match([7, 8, 9]) == 3
+    pc.release(h2)
+    pc.release(h3)
+    pc.check()
+
+
+def test_trie_rejects_bad_shapes_and_capacity():
+    with pytest.raises(ValueError, match="capacity_tokens"):
+        PrefixCache(capacity_tokens=0)
+    pc = PrefixCache()
+    with pytest.raises(ValueError, match="tokens on"):
+        pc.insert([1, 2, 3], _segs([1, 2]))
+
+
+# ---------------------------------------------------------------------------
+# property tests: random seeded insert/acquire/release churn
+# ---------------------------------------------------------------------------
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.integers(2, 30),
+       st.sampled_from([None, 8, 16, 64]))
+def test_trie_invariants_random_churn(seed, n_ops, capacity):
+    """For any seeded op sequence: `check()` holds after every op
+    (token conservation, non-negative pins, radix structure), eviction
+    never frees a pinned (live) slot, every acquire's matched length is
+    the true LCP against the surviving inserts, and the bytes handed
+    back always encode exactly the matched tokens."""
+    rng = np.random.default_rng(seed)
+    pc = PrefixCache(capacity_tokens=capacity)
+    inserted = {}                  # tuple(prompt) -> insert-order id
+    live = []                      # outstanding handles (+ their prompts)
+    n_acq = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        prompt = tuple(int(t) for t in rng.integers(0, 4, rng.integers(1, 7)))
+        if op == 0:                                          # insert
+            h = pc.insert(list(prompt), _segs(list(prompt)))
+            inserted[prompt] = True
+            if h is not None:
+                live.append((h, prompt))
+        elif op == 1:                                        # acquire
+            # eviction (on insert OR release) may have dropped unpinned
+            # entries — the LCP floor is over what the trie still fully
+            # holds; with capacity=None that is everything ever inserted
+            resident = [p for p in inserted if pc.match(list(p)) == len(p)]
+            true_lcp = max((_lcp(prompt, p) for p in resident), default=0)
+            n_acq += 1
+            L, segs, h = pc.acquire(list(prompt))
+            # the trie may hold MORE than the reference model knows
+            # about (partial prefixes survive leaf eviction), never less
+            assert L >= true_lcp, (prompt, L, true_lcp)
+            assert L == pc.match(list(prompt))
+            if L:
+                np.testing.assert_array_equal(
+                    segs["k0"][0, 0, :, 0],
+                    np.asarray(prompt[:L], np.float32))
+                live.append((h, prompt))
+        elif live:                                           # release
+            h, p = live.pop(int(rng.integers(0, len(live))))
+            pc.release(h)
+        pc.check()
+        # pinned (live) prefixes are never evicted out from under a
+        # decode in flight: each outstanding lease's node chain intact
+        for h, p in live:
+            node, toks = h.node, []
+            while node is not None and node.parent is not None:
+                toks = list(node.tokens) + toks
+                node = node.parent
+            assert pc.match(toks) == len(toks), \
+                "eviction freed a pinned prefix"
+    for h, _ in live:
+        pc.release(h)
+    pc.check()
+    s = pc.stats()
+    assert s["hits"] + s["misses"] == n_acq       # every acquire counted
+    if capacity is not None:
+        # with every pin released, eviction must have restored capacity
+        assert s["tokens"] <= capacity
