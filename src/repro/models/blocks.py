@@ -69,28 +69,73 @@ def rms_norm(x, scale, eps: float = 1e-6):
     return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
 
 
-_ROPE_MAX_POS = 4096
+_ROPE_MIN_TABLE = 4096
 
 
 @functools.lru_cache(maxsize=None)
-def _rope_tables(head_dim: int, theta: float):
-    """(cos, sin) tables of shape (_ROPE_MAX_POS, head_dim/2), computed
-    ONCE on the host with numpy so every program gathers identical
-    bytes (device cos/sin codegen is fusion-context-dependent)."""
+def _rope_tables(head_dim: int, theta: float, n_pos: int):
+    """(cos, sin) tables of shape (n_pos, head_dim/2), computed ONCE on
+    the host with numpy so every program gathers identical bytes
+    (device cos/sin codegen is fusion-context-dependent). Row ``p``
+    holds ``p * freqs`` independent of ``n_pos``, so tables of different
+    sizes agree byte-for-byte on their shared prefix — growing the
+    table never perturbs angles an earlier program already gathered."""
     freqs = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
                              / np.float32(head_dim)))
-    angles = np.arange(_ROPE_MAX_POS, dtype=np.float32)[:, None] * freqs
+    angles = np.arange(n_pos, dtype=np.float32)[:, None] * freqs
     return np.cos(angles), np.sin(angles)
 
 
-def rope(positions, head_dim: int, theta: float):
+def _rope_table_size(max_pos: int) -> int:
+    """Power-of-two table size covering ``max_pos`` positions, floored
+    at ``_ROPE_MIN_TABLE`` (keeps the lru_cache to a small ladder of
+    sizes instead of one entry per distinct sequence length)."""
+    n = _ROPE_MIN_TABLE
+    while n < max_pos:
+        n *= 2
+    return n
+
+
+def rope(positions, head_dim: int, theta: float,
+         max_pos: Optional[int] = None):
     """positions: (...,) int -> cos/sin tables (..., head_dim/2).
 
-    Positions wrap modulo ``_ROPE_MAX_POS`` (= 4096); serving positions
-    are bounded by the KV budget well below that."""
-    cos_t, sin_t = _rope_tables(head_dim, float(theta))
-    idx = positions % _ROPE_MAX_POS
-    return jnp.asarray(cos_t)[idx], jnp.asarray(sin_t)[idx]
+    The host table grows on demand to cover the positions actually
+    requested — positions never wrap. Concrete positions size it from
+    their true maximum; traced (abstract) positions require an explicit
+    static ``max_pos`` bound from the caller (the table shape must be
+    known at trace time; attention paths pass the model's ``max_seq``).
+    Out-of-range positions fail loudly instead of aliasing: concrete
+    positions past an explicit ``max_pos`` raise, and a traced gather
+    past the table end is NaN-poisoned (XLA would otherwise clamp it
+    silently), so a long-context overrun surfaces as NaN activations
+    rather than period-aliased rotary angles.
+    """
+    concrete = not isinstance(positions, jax.core.Tracer)
+    if concrete:
+        pos_np = np.asarray(positions)
+        lo = int(pos_np.min()) if pos_np.size else 0
+        hi = int(pos_np.max()) if pos_np.size else 0
+        if lo < 0:
+            raise ValueError(f"rope(): negative position {lo}")
+        if max_pos is not None and hi >= max_pos:
+            raise ValueError(
+                f"rope(): position {hi} >= declared max_pos {max_pos}")
+        n = _rope_table_size(hi + 1)
+    else:
+        if max_pos is None:
+            raise ValueError(
+                "rope(): traced positions need an explicit static "
+                "max_pos bound to size the host angle table")
+        n = _rope_table_size(int(max_pos))
+    cos_t, sin_t = _rope_tables(head_dim, float(theta), n)
+    cos = jnp.asarray(cos_t)[positions]
+    sin = jnp.asarray(sin_t)[positions]
+    if not concrete:
+        oob = (positions >= n)[..., None]
+        cos = jnp.where(oob, jnp.float32(np.nan), cos)
+        sin = jnp.where(oob, jnp.float32(np.nan), sin)
+    return cos, sin
 
 
 def apply_rope(x, cos, sin):
@@ -174,7 +219,11 @@ def attention(p: Params, x, cfg, *, window: Optional[int], positions=None,
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
-    cos, sin = rope(positions, hd, cfg.rope_theta)
+    # positions are normally a concrete arange (the table sizes itself);
+    # user-supplied traced positions fall back to the architectural bound
+    cos, sin = rope(positions, hd, cfg.rope_theta,
+                    max_pos=cfg.max_seq
+                    if isinstance(positions, jax.core.Tracer) else None)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
@@ -284,7 +333,8 @@ def decode_attention(p: Params, x, cache_k, cache_v, pos, cfg,
 
     q, k_new, v_new = _qkv_proj(p, x, cfg)
     vec = jnp.ndim(pos) > 0                 # per-slot positions (batch,)
-    cos, sin = rope(pos if vec else pos[None], hd, cfg.rope_theta)
+    cos, sin = rope(pos if vec else pos[None], hd, cfg.rope_theta,
+                    max_pos=cfg.max_seq)
     if vec:
         # (b, hd/2) -> (b, 1, 1, hd/2): each slot rotates at its own pos
         cos, sin = cos[:, None, None, :], sin[:, None, None, :]
@@ -465,7 +515,10 @@ def prefill_attention(p: Params, x, cache_k, cache_v, pos, n_tok, cfg,
 
     q, k_new, v_new = _qkv_proj(p, x, cfg)
     pmat = pos[:, None] + jnp.arange(S)[None, :]            # (b, S)
-    cos, sin = rope(pmat, hd, cfg.rope_theta)               # (b, S, hd/2)
+    # padded chunk columns may index past a row's real end; the +S head-
+    # room keeps their (discarded) lanes off the NaN-poison path
+    cos, sin = rope(pmat, hd, cfg.rope_theta,
+                    max_pos=cfg.max_seq + S)                # (b, S, hd/2)
     cos, sin = cos[:, None], sin[:, None]                   # (b, 1, S, hd/2)
     q = apply_rope(q, cos, sin)
     k_new = apply_rope(k_new, cos, sin)

@@ -70,7 +70,10 @@ class _Handle:
 
 def _slice_segs(segs: Dict[str, np.ndarray], lo: int,
                 hi: Optional[int]) -> Dict[str, np.ndarray]:
-    return {k: np.ascontiguousarray(v[:, :, lo:hi]) for k, v in segs.items()}
+    # unconditional copy: ascontiguousarray on an already-contiguous
+    # full slice returns the input VIEW, which would alias caller memory
+    return {k: np.array(v[:, :, lo:hi], order="C", copy=True)
+            for k, v in segs.items()}
 
 
 class PrefixCache:
@@ -215,8 +218,7 @@ class PrefixCache:
                 n.last_use = now
         if matched < len(prompt):
             child = _Node(tuple(prompt[matched:]),
-                          {k: np.ascontiguousarray(v[:, :, matched:])
-                           for k, v in segs.items()}, node)
+                          _slice_segs(segs, matched, None), node)
             child.last_use = now
             node.children[prompt[matched]] = child
             self._tokens += len(child.tokens)

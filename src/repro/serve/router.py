@@ -72,12 +72,17 @@ class Router:
         return sum(r.outstanding() for r in self.replicas)
 
     # -- routing -----------------------------------------------------------
-    def submit(self, req: Request) -> int:
+    def submit(self, req: Request) -> Optional[int]:
         """Route to the replica with the fewest outstanding requests
-        (lowest index on ties) and return its index."""
+        (lowest index on ties) and return its index — or ``None`` when
+        that replica rejected the request (``queue_limit``
+        backpressure: the drop is counted in its ``metrics()
+        ['rejected']`` and the rid is NOT recorded in ``routed``, so a
+        rid in ``routed`` always eventually appears in ``streams``)."""
         loads = [r.outstanding() for r in self.replicas]
         i = int(np.argmin(loads))
-        self.replicas[i].submit(req)
+        if not self.replicas[i].submit(req):
+            return None
         self.routed[req.rid] = i
         return i
 

@@ -213,6 +213,18 @@ class Scheduler:
                   or step_mod.slot_buckets(self.prefill_chunk))
         self._seq_buckets = tuple(sorted(
             {int(s) for s in ladder if 1 <= int(s) <= self._min_kv}))
+        dropped = tuple(sorted({int(s) for s in ladder
+                                if int(s) > self._min_kv}))
+        if dropped and scfg.prefill_seq_buckets is not None:
+            # loud degrade: the engine may have compiled plan buckets for
+            # these, but no fused chunk can exceed the smallest ring
+            # buffer without wrapping keys its own queries still read
+            warnings.warn(
+                f"prefill sequence buckets {dropped} exceed the smallest "
+                f"layer kv_len {self._min_kv} and were dropped; fused "
+                f"prefill chunks cap at "
+                f"{max(self._seq_buckets) if self._seq_buckets else 0} "
+                f"(usable ladder {self._seq_buckets})", stacklevel=2)
         if self.fused_prefill and not self._seq_buckets:
             raise ValueError(
                 f"no usable prefill sequence bucket <= the smallest layer "

@@ -392,6 +392,31 @@ def test_submit_and_clock_validation(tiny_eng):
         Scheduler(tiny_eng, prefill_chunk=0)
 
 
+def test_bounded_queue_backpressure(tiny_eng):
+    """The opt-in ``queue_limit`` rejects loudly: ``submit`` returns
+    False, the drop is counted in ``metrics()['rejected']``, and the
+    router propagates the rejection (returns None, rid NOT routed)."""
+    with pytest.raises(ValueError, match="queue_limit"):
+        Scheduler(tiny_eng, queue_limit=0)
+
+    def req(rid):
+        return Request(rid=rid, prompt=np.asarray([1, 2], np.int32),
+                       max_new_tokens=1)
+
+    sched = Scheduler(tiny_eng, max_slots=2, queue_limit=2)
+    assert sched.submit(req(0)) is True
+    assert sched.submit(req(1)) is True
+    assert sched.submit(req(2)) is False
+    assert sched.metrics()["rejected"] == 1
+    assert 2 not in sched.streams
+
+    router = Router([Scheduler(tiny_eng, max_slots=2, queue_limit=1)])
+    assert router.submit(req(10)) == 0
+    assert router.submit(req(11)) is None
+    assert 10 in router.routed and 11 not in router.routed
+    assert router.metrics()["rejected"] == 1
+
+
 # ---------------------------------------------------------------------------
 # property tests: random seeded traces (hypothesis / vendored shim)
 # ---------------------------------------------------------------------------
